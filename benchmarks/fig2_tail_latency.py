@@ -1,0 +1,36 @@
+"""Paper Fig. 2: AllReduce step times under contention (128-node sim).
+
+Paper protocol: RoCE baseline; Celeris window fixed at baseline
+median + 1 sigma; report p50/p99 per design + data loss.  Also runs the
+beyond-paper adaptive per-step window.
+"""
+import numpy as np
+
+from repro.core.transport import CollectiveSimulator, SimParams
+
+
+def run(n_rounds=300, seed=0):
+    sim = CollectiveSimulator(SimParams())
+    stats = sim.paper_protocol(n_rounds=n_rounds, seed=seed)
+    rows = []
+    print("\n== Fig. 2: AllReduce step time under contention (128 nodes) ==")
+    print(f"{'design':10s} {'p50 ms':>8s} {'p99 ms':>8s} {'p99/p50':>8s} "
+          f"{'loss %':>7s}")
+    for d, s in stats.items():
+        print(f"{d:10s} {s.p50/1e3:8.2f} {s.p99/1e3:8.2f} "
+              f"{s.p99/s.p50:8.2f} {s.mean_loss*100:7.2f}")
+        rows.append((f"fig2_p99_ms_{d}", round(s.p99 / 1e3, 2), None))
+    red = stats["roce"].p99 / stats["celeris"].p99
+    print(f"p99 reduction RoCE->Celeris: {red:.2f}x (paper: up to 2.3x; "
+          f"ours is larger because our baseline tail is heavier)")
+    rows.append(("fig2_p99_reduction", round(red, 2), 2.3))
+    rows.append(("fig2_celeris_loss_pct",
+                 round(stats["celeris"].mean_loss * 100, 2), 1.0))
+    # beyond-paper: adaptive per-ring-step window
+    cel2 = sim.run("celeris", n_rounds, adaptive=True, window="step",
+                   seed=seed)
+    red2 = stats["roce"].p99 / cel2.p99
+    print(f"beyond-paper adaptive step-window: p99 {cel2.p99/1e3:.2f} ms, "
+          f"loss {cel2.mean_loss*100:.2f}%, reduction {red2:.2f}x")
+    rows.append(("fig2_beyond_step_window_reduction", round(red2, 2), None))
+    return rows

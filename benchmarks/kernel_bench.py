@@ -1,0 +1,37 @@
+"""Kernel micro-bench: FWHT pallas (interpret) vs jnp oracle us/call.
+
+On this CPU container the pallas kernels run in interpret mode, so the
+timing column is an interface check, not a perf claim; the TPU path is
+exercised by setting REPRO_PALLAS_INTERPRET=0 on real hardware.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(f, *args, n=3):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run():
+    rows = []
+    print("\n== kernels: us/call (CPU; pallas in interpret mode) ==")
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 4096))
+    jit_ref = jax.jit(ref.fwht)
+    us_ref = _time(jit_ref, x)
+    print(f"fwht jnp-oracle  (256,4096): {us_ref:10.1f} us")
+    rows.append(("kernel_fwht_ref_us", round(us_ref, 1), None))
+    noise = jax.random.uniform(jax.random.PRNGKey(1), (256, 4096))
+    jit_q = jax.jit(lambda a, b: ref.quantize_int8(a, b))
+    us_q = _time(jit_q, x, noise)
+    print(f"quantize jnp     (256,4096): {us_q:10.1f} us")
+    rows.append(("kernel_quant_ref_us", round(us_q, 1), None))
+    return rows

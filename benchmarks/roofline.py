@@ -1,0 +1,32 @@
+"""Roofline table from the dry-run artifacts (results/dryrun/*.json)."""
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def run():
+    rows = []
+    files = sorted(glob.glob(os.path.join(RESULTS, "*__16x16.json")))
+    if not files:
+        print("\n== roofline: no dry-run artifacts yet "
+              "(run python -m repro.launch.dryrun --all) ==")
+        return rows
+    print("\n== Roofline (single-pod 16x16, per-step seconds) ==")
+    print(f"{'arch':22s} {'shape':12s} {'compute':>9s} {'memory':>9s} "
+          f"{'coll':>9s} {'dominant':>10s} {'useful':>7s} {'peakGiB':>8s}")
+    for f in files:
+        rec = json.load(open(f))
+        if rec.get("skipped"):
+            continue
+        rl = rec["roofline"]
+        print(f"{rec['arch']:22s} {rec['shape']:12s} "
+              f"{rl['compute_s']:9.3f} {rl['memory_s']:9.3f} "
+              f"{rl['collective_s']:9.3f} {rl['dominant']:>10s} "
+              f"{rl['useful_flops_ratio']:7.2f} "
+              f"{rec['memory']['peak_bytes']/2**30:8.2f}")
+        rows.append((f"roofline_{rec['arch']}_{rec['shape']}_dominant_s",
+                     round(max(rl['compute_s'], rl['memory_s'],
+                               rl['collective_s']), 3), None))
+    return rows

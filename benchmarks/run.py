@@ -1,0 +1,27 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,value,paper_reference`` CSV at the end.
+"""
+import sys
+
+
+def main() -> None:
+    from benchmarks import (table1_qp_state, table2_resources,
+                            fig2_tail_latency, fig1_loss_tolerance,
+                            kernel_bench, roofline)
+    quick = "--quick" in sys.argv
+    rows = []
+    rows += table1_qp_state.run()
+    rows += table2_resources.run()
+    rows += fig2_tail_latency.run(n_rounds=120 if quick else 300)
+    rows += fig1_loss_tolerance.run(steps=25 if quick else 60)
+    rows += kernel_bench.run()
+    rows += roofline.run()
+
+    print("\nname,value,paper_reference")
+    for name, val, ref in rows:
+        print(f"{name},{val},{'' if ref is None else ref}")
+
+
+if __name__ == "__main__":
+    main()

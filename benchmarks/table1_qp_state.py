@@ -1,0 +1,19 @@
+"""Paper Table I: per-QP NIC state + QP scalability."""
+from repro.core import qp_state
+
+
+def run():
+    rows = []
+    print("\n== Table I: per-QP context & scalability ==")
+    print(f"{'design':10s} {'per-QP B':>9s} {'paperB':>7s} "
+          f"{'rel+ord B':>10s} {'QPs@4.16MB':>11s} {'paper QPs':>10s}")
+    for d in ("roce", "irn", "srnic", "celeris"):
+        b = qp_state.qp_bytes(d)
+        rel = qp_state.reliability_state_bytes(d)
+        cap = qp_state.qp_capacity(d)
+        print(f"{d:10s} {b:9d} {qp_state.PAPER_QP_BYTES[d]:7d} "
+              f"{rel:10d} {cap:11d} {qp_state.PAPER_QP_SCALABILITY[d]:10d}")
+        rows.append(("table1_qp_bytes_" + d, b, qp_state.PAPER_QP_BYTES[d]))
+    ratio = qp_state.qp_capacity("celeris") / qp_state.qp_capacity("roce")
+    rows.append(("table1_qp_density_gain", round(ratio, 2), 8.0))
+    return rows

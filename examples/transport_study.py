@@ -1,0 +1,47 @@
+"""Transport study: reproduce paper Fig. 2 and explore the design space.
+
+    PYTHONPATH=src python examples/transport_study.py --rounds 300
+    PYTHONPATH=src python examples/transport_study.py --sweep-timeout
+"""
+import argparse
+
+import numpy as np
+
+from repro.core.transport import CollectiveSimulator, SimParams
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=200)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sweep-timeout", action="store_true",
+                    help="sweep the bounded-window size: tail vs loss")
+    args = ap.parse_args()
+
+    sim = CollectiveSimulator(SimParams())
+
+    if args.sweep_timeout:
+        base = sim.run("roce", args.rounds, seed=args.seed)
+        p50, sd = np.percentile(base.times_us, 50), base.times_us.std()
+        print(f"baseline p50={p50/1e3:.2f}ms sigma={sd/1e3:.2f}ms")
+        print(f"{'window':>12s} {'p99 ms':>8s} {'loss %':>8s}")
+        for k in (0.5, 1.0, 2.0, 4.0):
+            cel = sim.run("celeris", args.rounds,
+                          celeris_timeout_us=p50 + k * sd,
+                          adaptive=False, window="round", seed=args.seed)
+            print(f"median+{k:3.1f}sd {cel.p99/1e3:8.2f} "
+                  f"{cel.mean_loss*100:8.2f}")
+        return
+
+    stats = sim.paper_protocol(n_rounds=args.rounds, seed=args.seed)
+    print(f"{'design':10s} {'p50 ms':>8s} {'p99 ms':>8s} {'p999 ms':>9s} "
+          f"{'loss %':>7s}")
+    for d, s in stats.items():
+        print(f"{d:10s} {s.p50/1e3:8.2f} {s.p99/1e3:8.2f} "
+              f"{s.p999/1e3:9.2f} {s.mean_loss*100:7.2f}")
+    print(f"\np99 reduction roce->celeris: "
+          f"{stats['roce'].p99/stats['celeris'].p99:.2f}x (paper: 2.3x)")
+
+
+if __name__ == "__main__":
+    main()

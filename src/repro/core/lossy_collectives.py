@@ -1,0 +1,187 @@
+"""Lossy (best-effort) collectives — Celeris semantics on a TPU mesh.
+
+TPU ICI is lossless, so Celeris's "packets that miss the bounded window
+are discarded" is emulated at *wire-chunk granularity inside the
+collective*: every participant samples a per-(peer, wire-row) arrival
+mask from the step's drop probability (itself derived from the timeout
+controller + transport latency model) and contributes only the rows that
+"arrived".  Receivers finalize with what they have — exactly the
+receiver-side semantics of the paper's §III-B — and recover through the
+Hadamard/XOR coding layer (:mod:`repro.core.coding`).
+
+Everything here is shard_map-compatible and lowers to plain
+``psum`` / ``all_gather`` / ``all_to_all`` HLOs plus elementwise masking,
+so the dry-run (16x16 and 2x16x16 meshes) sees ordinary TPU collectives.
+
+Provided:
+- :func:`lossy_psum` / :func:`lossy_pmean` — gradient AllReduce (DP).
+- :func:`lossy_all_gather` — TP gather with optional XOR parity repair.
+- :func:`lossy_all_to_all` — MoE dispatch; dropped blocks surface as an
+  arrival mask so the router can take the shared-expert fallback path.
+- exact twins (``exact_*``) with identical signatures for A/B runs.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import coding
+
+AxisNames = str | Sequence[str]
+
+
+def _axis_size(axis_name: AxisNames) -> int:
+    if isinstance(axis_name, str):
+        return jax.lax.axis_size(axis_name)
+    size = 1
+    for a in axis_name:
+        size *= jax.lax.axis_size(a)
+    return size
+
+
+def _peer_key(key: jax.Array, axis_name: AxisNames) -> jax.Array:
+    """Fold the device's coordinate along ``axis_name`` into the key so
+    each peer samples an independent arrival mask (same key across the
+    rest of the mesh)."""
+    if isinstance(axis_name, str):
+        return jax.random.fold_in(key, jax.lax.axis_index(axis_name))
+    k = key
+    for a in axis_name:
+        k = jax.random.fold_in(k, jax.lax.axis_index(a))
+    return k
+
+
+def arrival_mask(key: jax.Array, n_rows: int, drop_rate: jax.Array) -> jax.Array:
+    """Bernoulli(1 - drop_rate) per wire row: True = arrived in window."""
+    return jax.random.uniform(key, (n_rows,)) >= drop_rate
+
+
+# ----------------------------------------------------------------------
+# AllReduce (data-parallel gradient sync)
+# ----------------------------------------------------------------------
+
+def lossy_psum(x: jax.Array, axis_name: AxisNames, *, key: jax.Array,
+               drop_rate: jax.Array, signs: jax.Array,
+               code: coding.HadamardCode,
+               use_pallas: bool = True,
+               constrain=None, out_blocks: bool = False
+               ) -> tuple[jax.Array, jax.Array]:
+    """Best-effort AllReduce of a flat f32 payload.
+
+    Returns (unbiased sum estimate, realized received fraction).
+    ``signs``/``code`` must be identical on every participant.
+    """
+    peers = _axis_size(axis_name)
+    wire = coding.encode(x, signs, code, use_pallas=use_pallas,
+                         constrain=constrain)
+    mask = arrival_mask(_peer_key(key, axis_name), code.n_rot, drop_rate)
+    contrib = wire * mask[:, None].astype(wire.dtype)
+    counts = mask.astype(jnp.float32)
+    wire_sum = jax.lax.psum(contrib, axis_name)
+    count_sum = jax.lax.psum(counts, axis_name)
+    est = coding.decode(wire_sum, count_sum, signs, code,
+                        total_peers=peers, use_pallas=use_pallas,
+                        constrain=constrain, out_blocks=out_blocks)
+    frac = jnp.sum(count_sum) / (peers * code.n_rot)
+    return est, frac
+
+
+def lossy_pmean(x: jax.Array, axis_name: AxisNames, **kw):
+    peers = _axis_size(axis_name)
+    s, frac = lossy_psum(x, axis_name, **kw)
+    return s / peers, frac
+
+
+def exact_psum(x: jax.Array, axis_name: AxisNames) -> jax.Array:
+    return jax.lax.psum(x, axis_name)
+
+
+def exact_pmean(x: jax.Array, axis_name: AxisNames) -> jax.Array:
+    return jax.lax.pmean(x, axis_name)
+
+
+# ----------------------------------------------------------------------
+# AllGather (tensor-parallel activations) with XOR parity repair
+# ----------------------------------------------------------------------
+
+def lossy_all_gather(x: jax.Array, axis_name: str, *, key: jax.Array,
+                     drop_rate: jax.Array, parity: bool = True,
+                     tiled: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Best-effort AllGather of this shard.
+
+    Each peer's shard is one "chunk".  A dropped chunk is zero-filled;
+    when ``parity`` is on, an XOR parity chunk rides along (1/P bandwidth
+    overhead) and repairs any *single* lost shard exactly — the paper's
+    prioritized-data path for activations, where statistical tolerance
+    alone is weaker than for gradients.
+
+    Returns (gathered (P, ...) or tiled, arrived mask (P,)).
+    """
+    p = jax.lax.axis_size(axis_name)
+    me = jax.lax.axis_index(axis_name)
+    mask = arrival_mask(_peer_key(key, axis_name), p, drop_rate)
+    arrived_here = mask[me]
+    contrib = jnp.where(arrived_here, x, jnp.zeros_like(x))
+    gathered = jax.lax.all_gather(contrib, axis_name)          # (P, ...)
+    arrived = jax.lax.all_gather(arrived_here, axis_name)      # (P,)
+    if parity:
+        flat = gathered.reshape(p, -1)
+        # parity of *all* shards is an XOR all-reduce of bit patterns;
+        # it rides along the same step (counts as collective bytes).
+        pbits = jax.lax.bitcast_convert_type(x.reshape(-1), jnp.int32)
+        parity_bits = _xor_allreduce(pbits, axis_name)
+        parity_chunk = jax.lax.bitcast_convert_type(parity_bits, jnp.float32)
+        flat = coding.xor_parity_decode(flat, parity_chunk, arrived)
+        gathered = flat.reshape(gathered.shape)
+    if tiled:
+        gathered = gathered.reshape((p * x.shape[0],) + x.shape[1:])
+    return gathered, arrived
+
+
+def _xor_allreduce(bits: jax.Array, axis_name: str) -> jax.Array:
+    """XOR all-reduce via gather+fold (XLA has no XOR all-reduce op)."""
+    g = jax.lax.all_gather(bits, axis_name)                    # (P, n)
+    return jax.lax.reduce(g, jnp.int32(0), jax.lax.bitwise_xor, (0,))
+
+
+def exact_all_gather(x: jax.Array, axis_name: str, *, tiled: bool = False):
+    return jax.lax.all_gather(x, axis_name, tiled=tiled)
+
+
+# ----------------------------------------------------------------------
+# All-to-All (expert-parallel dispatch)
+# ----------------------------------------------------------------------
+
+def lossy_all_to_all(x: jax.Array, axis_name: str, *, key: jax.Array,
+                     drop_rate: jax.Array,
+                     split_axis: int = 0, concat_axis: int = 0
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Best-effort All-to-All.
+
+    ``x`` is split into P blocks along ``split_axis``; block j travels to
+    peer j.  Each (src, dst) block is dropped i.i.d. with ``drop_rate``.
+    Returns (received tensor with dropped blocks zeroed, arrival mask of
+    shape (P,) — True where the block from peer j arrived here).  The
+    MoE layer routes un-arrived tokens to the shared-expert fallback
+    (paper §II-B "expert fallback paths").
+    """
+    p = jax.lax.axis_size(axis_name)
+    assert x.shape[split_axis] == p, (x.shape, split_axis, p)
+    # (src=me, dst=j) arrival coin for every destination block
+    mask_out = arrival_mask(_peer_key(key, axis_name), p, drop_rate)  # (P,)
+    shape = [1] * x.ndim
+    shape[split_axis] = p
+    masked = x * mask_out.reshape(shape).astype(x.dtype)
+    recv = jax.lax.all_to_all(masked, axis_name, split_axis=split_axis,
+                              concat_axis=concat_axis)
+    arrived = jax.lax.all_to_all(mask_out[:, None], axis_name,
+                                 split_axis=0, concat_axis=0)[:, 0]
+    return recv, arrived
+
+
+def exact_all_to_all(x: jax.Array, axis_name: str, *, split_axis: int = 0,
+                     concat_axis: int = 0) -> jax.Array:
+    return jax.lax.all_to_all(x, axis_name, split_axis=split_axis,
+                              concat_axis=concat_axis)

@@ -1,0 +1,118 @@
+"""Bounded delivery windows (paper §III-B).
+
+Celeris replaces NIC-managed reliability with software step-level
+timeouts.  Per collective *group* (data-parallel, tensor-parallel,
+expert-parallel ... each concurrent collective keeps its own profile):
+
+- after each step, measure (duration, received_fraction);
+- if everything arrived, track the observed duration;
+- if only partial data arrived, estimate the duration needed for full
+  delivery (duration / received_fraction) and aim there;
+- smooth with exponential averaging and clamp to a fixed range;
+- nodes exchange local estimates and all adopt the **median** for the
+  next round (straggler-robust cluster coordination).
+
+Two implementations are provided with identical semantics:
+
+- :class:`TimeoutController` — host-side Python (drives the transport
+  simulator and the trainer's loss model);
+- :func:`update_jax` / :func:`coordinate_jax` — pure-``jnp`` versions
+  usable inside a jitted train step (the state rides in the loop carry),
+  property-tested for equivalence against the host version.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class TimeoutConfig:
+    alpha: float = 0.25          # EWMA smoothing factor
+    margin: float = 1.10         # headroom over the estimated full-delivery time
+    min_timeout: float = 1e-4    # clamp range (seconds)
+    max_timeout: float = 10.0
+    init_timeout: float = 0.05
+    eps: float = 1e-3            # floor on received_fraction in the estimate
+
+
+@dataclasses.dataclass
+class TimeoutState:
+    timeout: float
+    smoothed_target: float
+
+    @classmethod
+    def init(cls, cfg: TimeoutConfig) -> "TimeoutState":
+        return cls(timeout=cfg.init_timeout, smoothed_target=cfg.init_timeout)
+
+
+def _target(duration: float, received_fraction: float, cfg: TimeoutConfig):
+    """Estimated duration for full delivery of the next step."""
+    frac = max(float(received_fraction), cfg.eps)
+    if frac >= 1.0:
+        return duration                      # everything arrived: track observed
+    return duration / frac * cfg.margin      # extrapolate to full delivery
+
+
+class TimeoutController:
+    """Host-side adaptive timeout for one collective group."""
+
+    def __init__(self, cfg: TimeoutConfig | None = None):
+        self.cfg = cfg or TimeoutConfig()
+        self.state = TimeoutState.init(self.cfg)
+
+    @property
+    def timeout(self) -> float:
+        return self.state.timeout
+
+    def update(self, duration: float, received_fraction: float) -> float:
+        cfg = self.cfg
+        tgt = _target(duration, received_fraction, cfg)
+        sm = (1.0 - cfg.alpha) * self.state.smoothed_target + cfg.alpha * tgt
+        to = float(np.clip(sm, cfg.min_timeout, cfg.max_timeout))
+        self.state = TimeoutState(timeout=to, smoothed_target=sm)
+        return to
+
+    def adopt(self, cluster_timeout: float) -> float:
+        """Adopt the cluster-coordinated (median) timeout for the next round."""
+        to = float(np.clip(cluster_timeout, self.cfg.min_timeout, self.cfg.max_timeout))
+        self.state = TimeoutState(timeout=to, smoothed_target=self.state.smoothed_target)
+        return to
+
+
+def coordinate(local_timeouts: Sequence[float]) -> float:
+    """Cluster coordination: all nodes adopt the median of reported values."""
+    return float(np.median(np.asarray(local_timeouts)))
+
+
+# ----------------------------------------------------------------------
+# In-graph (jnp) versions — state is a (timeout, smoothed_target) pair of
+# scalars; semantics match the host implementation bit-for-bit in f64.
+# ----------------------------------------------------------------------
+
+def init_jax(cfg: TimeoutConfig) -> jax.Array:
+    return jnp.array([cfg.init_timeout, cfg.init_timeout], dtype=jnp.float32)
+
+
+def update_jax(state: jax.Array, duration: jax.Array, received_fraction: jax.Array,
+               cfg: TimeoutConfig) -> jax.Array:
+    frac = jnp.maximum(received_fraction, cfg.eps)
+    tgt = jnp.where(frac >= 1.0, duration, duration / frac * cfg.margin)
+    sm = (1.0 - cfg.alpha) * state[1] + cfg.alpha * tgt
+    to = jnp.clip(sm, cfg.min_timeout, cfg.max_timeout)
+    return jnp.stack([to, sm])
+
+
+def coordinate_jax(local_timeouts: jax.Array, axis_name: str) -> jax.Array:
+    """Median across a mesh axis, inside shard_map.
+
+    ``local_timeouts`` is this shard's scalar estimate; returns the median
+    of all participants along ``axis_name`` (an all-gather + sort —
+    exactly the per-step estimate exchange from the paper).
+    """
+    gathered = jax.lax.all_gather(local_timeouts, axis_name)
+    return jnp.median(gathered)

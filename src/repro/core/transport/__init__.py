@@ -1,0 +1,9 @@
+from repro.core.transport.params import (
+    SimParams, NetworkParams, DcqcnParams, ReliabilityParams, WorkloadParams)
+from repro.core.transport.simulator import CollectiveSimulator, RoundStats
+from repro.core.transport.designs import DESIGNS
+
+__all__ = [
+    "SimParams", "NetworkParams", "DcqcnParams", "ReliabilityParams",
+    "WorkloadParams", "CollectiveSimulator", "RoundStats", "DESIGNS",
+]

@@ -1,0 +1,48 @@
+"""DCQCN congestion control (vectorized over flows).
+
+All four simulated NIC designs keep DCQCN in hardware (paper Table I,
+"Congestion Control: Hardware").  Standard behavior: ECN-marked packets
+trigger CNPs; the sender cuts rate multiplicatively by alpha/2 and
+tracks a congestion estimate alpha; absent CNPs the rate recovers via
+additive then hyper increase stages.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.transport.params import DcqcnParams
+
+
+@dataclasses.dataclass
+class DcqcnState:
+    rate: np.ndarray          # (n_flows,) fraction of line rate
+    target: np.ndarray
+    alpha: np.ndarray
+    good_stages: np.ndarray   # consecutive no-CNP stages
+
+    @classmethod
+    def init(cls, n_flows: int) -> "DcqcnState":
+        return cls(rate=np.ones(n_flows), target=np.ones(n_flows),
+                   alpha=np.ones(n_flows), good_stages=np.zeros(n_flows, int))
+
+
+def step(state: DcqcnState, cnp_received: np.ndarray, p: DcqcnParams) -> DcqcnState:
+    """One control interval: apply CNP cuts / increases per flow."""
+    r, t, a, g = state.rate, state.target, state.alpha, state.good_stages
+
+    # --- congestion: multiplicative decrease, alpha <- EWMA toward 1
+    a_new = np.where(cnp_received, (1 - p.alpha_g) * a + p.alpha_g, (1 - p.alpha_g) * a)
+    t_new = np.where(cnp_received, r, t)
+    r_cut = np.maximum(r * (1 - a_new / 2), p.rate_decrease_floor)
+
+    # --- recovery: additive toward target, hyper after sustained calm
+    g_new = np.where(cnp_received, 0, g + 1)
+    add = np.minimum(t_new, r + p.additive_increase)
+    hyper = np.minimum(1.0, r + p.hyper_increase)
+    r_up = np.where(g_new > p.hyper_after, hyper, add)
+
+    rate = np.clip(np.where(cnp_received, r_cut, r_up), p.min_rate, 1.0)
+    return DcqcnState(rate=rate, target=np.clip(t_new, p.min_rate, 1.0),
+                      alpha=a_new, good_stages=g_new)

@@ -1,0 +1,100 @@
+"""Clos fabric + background-contention model.
+
+Foreground collective packets are simulated per chunk; background load
+is a Markov-modulated burst process per ToR uplink (on/off with
+occupancy drawn per burst).  Occupancy determines queueing delay, ECN
+marking probability, drop probability, and (for RoCE) PFC pause events.
+All state is numpy-vectorized over nodes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.transport.params import NetworkParams
+
+
+@dataclasses.dataclass
+class FabricState:
+    """Per-node path-congestion state (node i's send path this step)."""
+    bursting: np.ndarray      # (n_tors,) bool
+    occupancy: np.ndarray     # (n_tors,) current uplink occupancy
+
+
+class ClosFabric:
+    """2-tier Clos: nodes -> ToR -> spine.  Ring neighbors that share a
+    ToR traverse one hop; cross-ToR hops traverse the (contended) uplink.
+    """
+
+    def __init__(self, p: NetworkParams, rng: np.ndarray | None = None,
+                 seed: int = 0):
+        self.p = p
+        self.n_tors = p.n_nodes // p.nodes_per_tor
+        self.rng = np.random.default_rng(seed)
+        self.state = FabricState(
+            bursting=np.zeros(self.n_tors, dtype=bool),
+            occupancy=np.full(self.n_tors, p.idle_occupancy),
+        )
+
+    def tor_of(self, node: np.ndarray) -> np.ndarray:
+        return node // self.p.nodes_per_tor
+
+    def advance(self) -> None:
+        """One collective-step tick of the background burst process."""
+        p, st, rng = self.p, self.state, self.rng
+        start = rng.random(self.n_tors) < p.burst_on_prob
+        stop = rng.random(self.n_tors) < p.burst_off_prob
+        st.bursting = (st.bursting & ~stop) | (~st.bursting & start)
+        burst_occ = rng.uniform(p.burst_occupancy_lo, p.burst_occupancy_hi,
+                                self.n_tors)
+        target = np.where(st.bursting, burst_occ, p.idle_occupancy)
+        # occupancy relaxes toward target (queues drain/fill gradually)
+        st.occupancy = 0.5 * st.occupancy + 0.5 * target
+
+    def path_occupancy(self, src: np.ndarray, dst: np.ndarray) -> np.ndarray:
+        """Occupancy seen by each (src,dst) transfer: max over traversed
+        uplinks; same-ToR transfers see only local (near-idle) queues."""
+        p = self.p
+        ts, td = self.tor_of(src), self.tor_of(dst)
+        up = self.state.occupancy[ts]
+        down = self.state.occupancy[td]
+        cross = np.maximum(up, down)
+        same = np.full_like(cross, p.idle_occupancy)
+        return np.where(ts == td, same, cross)
+
+    # --- derived per-transfer quantities -----------------------------
+
+    def queue_delay_us(self, occ: np.ndarray) -> np.ndarray:
+        return self.p.queue_capacity_us * occ ** 3
+
+    def avail_bandwidth(self, occ: np.ndarray) -> np.ndarray:
+        """Fraction of line rate available to the foreground transfer."""
+        p = self.p
+        return np.clip(1.0 - p.bg_bandwidth_weight * occ, p.min_avail_frac, 1.0)
+
+    def ecn_mark_prob(self, occ: np.ndarray) -> np.ndarray:
+        p = self.p
+        x = np.clip((occ - p.ecn_threshold) / (1 - p.ecn_threshold), 0, 1)
+        return x
+
+    def drop_prob(self, occ: np.ndarray) -> np.ndarray:
+        p = self.p
+        x = np.clip((occ - p.loss_knee) / (1 - p.loss_knee), 0, 1)
+        return p.loss_max_prob * x ** 2
+
+    def pfc_pause_us(self, occ: np.ndarray) -> np.ndarray:
+        """RoCE only: PAUSE stalls when ingress exceeds the PFC threshold.
+        A pause on a ToR uplink head-of-line-blocks *every* flow through
+        that ToR; each pause propagates a further hop with probability
+        ``pfc_cascade_prob`` (geometric storm, capped)."""
+        p = self.p
+        paused = occ > p.pfc_threshold
+        total = np.where(paused, p.pfc_pause_us, 0.0)
+        alive = paused.copy()
+        for _ in range(p.pfc_max_cascade):
+            alive = alive & (self.rng.random(occ.shape) < p.pfc_cascade_prob)
+            if not alive.any():
+                break
+            total = total + np.where(alive, p.pfc_pause_us, 0.0)
+        return total

@@ -1,0 +1,87 @@
+"""Transport-simulation parameters (paper §IV evaluation setup).
+
+128-node 2-tier Clos, 100G host links, 25 MB AllReduce rounds, bursty
+randomized background traffic injected to create contention.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkParams:
+    n_nodes: int = 128
+    nodes_per_tor: int = 16
+    link_gbps: float = 100.0
+    mtu_bytes: int = 4096
+    base_rtt_us: float = 8.0            # propagation + switching, intra-fabric
+
+    # background traffic: Markov-modulated bursts per ToR uplink.
+    # Bursts are rare but long (mean ~1/off_prob steps), so some rounds
+    # sail through an idle fabric while others ride out a storm — the
+    # bimodality that produces realistic p99/p50 ratios.
+    burst_on_prob: float = 0.00012      # P(burst starts) per ToR-step
+    burst_off_prob: float = 0.02        # P(burst ends) per step -> ~50-step bursts
+    burst_occupancy_lo: float = 0.55    # link share taken while bursting
+    burst_occupancy_hi: float = 0.95
+    idle_occupancy: float = 0.05
+
+    # share of line rate left for the foreground flow under contention
+    bg_bandwidth_weight: float = 0.80
+    min_avail_frac: float = 0.30
+
+    # queueing / loss model (switch buffer ~ 2 ms drain at 100G)
+    queue_capacity_us: float = 100.0    # max queueing delay at full buffer
+    ecn_threshold: float = 0.45         # occupancy that starts ECN marking
+    loss_knee: float = 0.55             # occupancy where drops begin
+    loss_max_prob: float = 0.025        # per-packet drop prob at occupancy 1
+
+    # PFC (RoCE only): pauses can cascade hop-by-hop into storms
+    pfc_threshold: float = 0.80         # occupancy triggering PAUSE upstream
+    pfc_pause_us: float = 120.0         # quanta-scale pause duration
+    pfc_cascade_prob: float = 0.30      # chance each pause propagates further
+    pfc_max_cascade: int = 6
+
+    @property
+    def link_bytes_per_us(self) -> float:
+        return self.link_gbps * 1e9 / 8 / 1e6
+
+    @property
+    def pkt_time_us(self) -> float:
+        return self.mtu_bytes / self.link_bytes_per_us
+
+
+@dataclasses.dataclass(frozen=True)
+class DcqcnParams:
+    """DCQCN rate control (kept in hardware on all four designs)."""
+    alpha_g: float = 0.00390625         # 1/256 alpha EWMA gain
+    rate_decrease_floor: float = 0.30   # min rate fraction after cuts
+    additive_increase: float = 0.05     # RAI per increase event (fraction)
+    hyper_increase: float = 0.05        # HAI after sustained no-congestion
+    hyper_after: int = 5                # stages before hyper increase
+    min_rate: float = 0.30
+
+
+@dataclasses.dataclass(frozen=True)
+class ReliabilityParams:
+    """Per-design recovery behavior knobs."""
+    nack_delay_us: float = 4.0          # NACK generation + return latency
+    rto_us: float = 1000.0              # RoCE retransmission timeout
+    rto_low_us: float = 100.0           # IRN/SRNIC low RTO (tail-loss probe)
+    host_slowpath_us: float = 25.0      # SRNIC SW retransmission handling
+    max_retries: int = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadParams:
+    message_bytes: int = 25 * 1024 * 1024   # 25 MB per node per round
+    algorithm: str = "ring"                  # ring reduce-scatter + all-gather
+
+
+@dataclasses.dataclass(frozen=True)
+class SimParams:
+    net: NetworkParams = NetworkParams()
+    dcqcn: DcqcnParams = DcqcnParams()
+    rel: ReliabilityParams = ReliabilityParams()
+    work: WorkloadParams = WorkloadParams()
+    seed: int = 0

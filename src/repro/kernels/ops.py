@@ -1,0 +1,72 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Shape-polymorphic entry points: callers pass any (rows, n) with n a
+power of two; padding to kernel tile multiples happens here.  On this
+CPU container the kernels execute in interpret mode (the kernel body
+runs in Python op-by-op); on TPU set ``REPRO_PALLAS_INTERPRET=0`` to
+compile for the MXU.  ``use_pallas=False`` routes to the pure-jnp oracle
+(used by the dry-run lowering, where interpret-mode callbacks cannot be
+staged for a TPU mesh).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fwht as _fwht
+from repro.kernels import quantize as _quant
+from repro.kernels import ref
+from repro.kernels import unbias as _unbias
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def _pad_rows(x: jax.Array, mult: int) -> tuple[jax.Array, int]:
+    rows = x.shape[0]
+    pad = (-rows) % mult
+    if pad:
+        x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    return x, rows
+
+
+def fwht(x: jax.Array, *, use_pallas: bool = True, block_rows: int = 128) -> jax.Array:
+    """Unnormalized FWHT along the last axis of a 2-D array."""
+    if not use_pallas:
+        return ref.fwht(x)
+    rows, n = x.shape
+    block_rows = min(block_rows, max(8, rows))
+    xp, rows0 = _pad_rows(x, block_rows)
+    out = _fwht.fwht_pallas(xp, block_rows=block_rows, interpret=INTERPRET)
+    return out[:rows0]
+
+
+def quantize_int8(x: jax.Array, noise: jax.Array, *, use_pallas: bool = True,
+                  block_rows: int = 256):
+    if not use_pallas:
+        return ref.quantize_int8(x, noise)
+    rows, n = x.shape
+    block_rows = min(block_rows, max(8, rows))
+    xp, rows0 = _pad_rows(x, block_rows)
+    np_, _ = _pad_rows(noise, block_rows)
+    q, scale = _quant.quantize_int8_pallas(xp, np_, block_rows=block_rows,
+                                           interpret=INTERPRET)
+    return q[:rows0], scale[:rows0]
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return ref.dequantize_int8(q, scale)
+
+
+def masked_unbias(y_sum: jax.Array, counts: jax.Array, total: int, *,
+                  use_pallas: bool = True, block_rows: int = 256) -> jax.Array:
+    if not use_pallas:
+        return ref.masked_unbias(y_sum, counts, total)
+    rows, n = y_sum.shape
+    block_rows = min(block_rows, max(8, rows))
+    yp, rows0 = _pad_rows(y_sum, block_rows)
+    cp, _ = _pad_rows(counts, block_rows)
+    out = _unbias.masked_unbias_pallas(yp, cp, total=total,
+                                       block_rows=block_rows, interpret=INTERPRET)
+    return out[:rows0]

@@ -1,0 +1,196 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    # CPU-only workaround: AllReducePromotion CHECK-crashes on the
+    # mixed-dtype variadic all-reduces the combiner builds from bf16
+    # wire + f32 count syncs (irrelevant on TPU).
+    "--xla_disable_hlo_passes=all-reduce-promotion")
+
+"""Multi-pod dry run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: parameter
+and activation shardings must partition, collectives must be legal on
+the mesh, and the compiled module's memory analysis must fit the chips.
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k
+    python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k --multi-pod
+    python -m repro.launch.dryrun --all          # every runnable cell, both meshes
+
+Each run appends a JSON record (memory analysis, cost analysis,
+collective-byte breakdown parsed from the post-SPMD HLO) to
+``results/dryrun/<arch>__<shape>__<mesh>.json`` for EXPERIMENTS.md and
+the roofline benchmark to consume.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro import sharding as shd
+from repro.configs.base import SHAPES
+from repro.launch import costs
+from repro.launch import mesh as mesh_mod
+from repro.launch import specs
+from repro.optim import adamw
+from repro.serve import serve_step
+from repro.train import train_step as ts
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               celeris: bool = True, quantize_wire: bool = False):
+    cfg = C.get(arch)
+    shape = SHAPES[shape_name]
+    if shape_name not in C.runnable_shapes(cfg):
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "long_500k needs sub-quadratic attention"}
+
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    shd.set_global_mesh(mesh)
+    t0 = time.time()
+
+    # gradient accumulation so multi-B-param train cells fit 16 GB HBM
+    n_params = cfg.param_count()
+    micro = 4 if n_params >= 6e9 else (2 if n_params >= 2e9 else 1)
+
+    if shape.kind == "train":
+        state = specs.abstract_state(cfg, mesh)
+        batch = specs.train_input_specs(cfg, shape, mesh)
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32,
+                                   sharding=jax.sharding.NamedSharding(
+                                       mesh, jax.sharding.PartitionSpec()))
+        drop = jax.ShapeDtypeStruct((), jnp.float32,
+                                    sharding=jax.sharding.NamedSharding(
+                                        mesh, jax.sharding.PartitionSpec()))
+        step_fn = ts.make_train_step(
+            cfg, mesh, adamw.OptConfig(),
+            ts.CelerisConfig(enabled=celeris,
+                             lossy_moe=celeris and cfg.moe is not None,
+                             quantize_wire=quantize_wire),
+            donate=True, microbatches=micro)
+        lowered = step_fn.lower(state, batch, key, drop)
+        jax_costs = costs.trace_costs(step_fn, state, batch, key, drop)
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * cfg.active_param_count() * tokens
+    elif shape.kind == "prefill":
+        params = specs.abstract_params(cfg, mesh)
+        batch = specs.prefill_input_specs(cfg, shape, mesh)
+        fn = serve_step.make_prefill(cfg, shape.seq_len)
+        lowered = fn.lower(params, batch)
+        jax_costs = costs.trace_costs(fn, params, batch)
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * cfg.active_param_count() * tokens
+    else:   # decode
+        params = specs.abstract_params(cfg, mesh)
+        batch, caches, index = specs.decode_input_specs(cfg, shape, mesh)
+        fn = serve_step.make_decode(cfg)
+        lowered = fn.lower(params, caches, batch, index)
+        jax_costs = costs.trace_costs(fn, params, caches, batch, index)
+        model_flops = 2.0 * cfg.active_param_count() * shape.global_batch
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    colls = costs.hlo_collective_bytes(compiled.as_text())
+
+    n_dev = mesh.devices.size
+    coll_per_dev = colls.get("total_bytes", 0.0)
+    rl = costs.roofline(jax_costs["flops"], jax_costs["hbm_bytes"],
+                        coll_per_dev, int(n_dev), model_flops,
+                        mesh_mod.HW)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": int(n_dev),
+        "celeris": celeris,
+        "kind": shape.kind,
+        "microbatches": micro if shape.kind == "train" else None,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": (getattr(mem, "temp_size_in_bytes", 0) or 0)
+                          + (getattr(mem, "argument_size_in_bytes", 0) or 0),
+        },
+        "cost": {k: cost.get(k) for k in
+                 ("flops", "bytes accessed", "transcendentals",
+                  "bytes accessed output")} if cost else {},
+        "collectives": {k: v for k, v in colls.items()
+                        if k != "total_bytes"},
+        "collective_bytes_total": coll_per_dev,
+        "jaxpr_costs": jax_costs,
+        "model_flops": model_flops,
+        "roofline": rl,
+    }
+    return rec
+
+
+def run_and_save(arch, shape_name, multi_pod, celeris=True,
+                 quantize_wire=False):
+    rec = lower_cell(arch, shape_name, multi_pod, celeris, quantize_wire)
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    tag = f"{C.canonical(arch)}__{shape_name}__" \
+          f"{'2x16x16' if multi_pod else '16x16'}"
+    path = os.path.join(RESULTS_DIR, tag + ".json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec, path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str)
+    ap.add_argument("--shape", type=str)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-celeris", action="store_true",
+                    help="baseline (exact collectives) variant")
+    ap.add_argument("--quantize-wire", action="store_true",
+                    help="H6: int8 wire w/ s16 reduction")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        cells = []
+        for arch in C.ARCHS:
+            cfg = C.get(arch)
+            for shape_name in C.runnable_shapes(cfg):
+                for mp in (False, True):
+                    cells.append((arch, shape_name, mp))
+        failures = 0
+        for arch, shape_name, mp in cells:
+            try:
+                rec, _ = run_and_save(arch, shape_name, mp,
+                                      celeris=not args.no_celeris)
+                mm = rec["memory"]["peak_bytes"]
+                print(f"OK  {arch:24s} {shape_name:12s} "
+                      f"{'2x16x16' if mp else '16x16':8s} "
+                      f"compile={rec['compile_s']:7.1f}s "
+                      f"peak/dev={mm/2**30:6.2f}GiB "
+                      f"coll={rec['collective_bytes_total']/2**20:8.1f}MiB",
+                      flush=True)
+            except Exception as e:  # noqa: BLE001
+                failures += 1
+                print(f"FAIL {arch} {shape_name} mp={mp}: "
+                      f"{type(e).__name__}: {e}", flush=True)
+        sys.exit(1 if failures else 0)
+
+    rec, path = run_and_save(args.arch, args.shape, args.multi_pod,
+                             celeris=not args.no_celeris,
+                             quantize_wire=args.quantize_wire)
+    print(json.dumps(rec, indent=1))
+    print(f"saved -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production mesh definitions (TPU v5e-pod-scale).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state.  Single pod: 16x16 = 256 chips (data, model).  Multi-pod: 2 pods
+x 256 = 512 chips with a leading "pod" axis; "pod" composes with "data"
+for gradient reduction (DP = pod x data = 32) and is the axis Celeris's
+lossy sync cares about most (cross-pod DCI links are the slow, lossy
+hops).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape=(4, 2), axes=("data", "model")) -> jax.sharding.Mesh:
+    """Small mesh for container-scale integration tests."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+HW = {
+    # TPU v5e-like hardware constants for the roofline (per chip)
+    "peak_flops_bf16": 197e12,      # FLOP/s
+    "hbm_bw": 819e9,                # B/s
+    "ici_bw_per_link": 50e9,        # B/s per link direction
+}

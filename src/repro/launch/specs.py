@@ -1,0 +1,131 @@
+"""Abstract input specs (ShapeDtypeStruct) per (arch x shape) cell.
+
+No device allocation happens here: everything is shape/dtype/sharding
+metadata that ``jax.jit(...).lower()`` consumes directly.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import repro.configs as C
+from repro import sharding as shd
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as M
+
+
+def _sds(shape, dtype, mesh=None, spec=None):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec or P()))
+
+
+def _batch_spec(mesh, batch_size: int) -> P:
+    """Shard batch over dp axes only when divisible (long_500k B=1)."""
+    if mesh is None:
+        return P()
+    dp = shd.dp_axes(mesh)
+    n = 1
+    for a in dp:
+        n *= mesh.shape[a]
+    return P(dp) if batch_size % n == 0 and batch_size >= n else P()
+
+
+def token_extras(cfg: ModelConfig, b: int, s: int, mesh=None) -> Dict[str, Any]:
+    """Frontend stub inputs (precomputed embeddings), per DESIGN.md."""
+    bspec = _batch_spec(mesh, b)
+    extras: Dict[str, Any] = {}
+    if cfg.frontend == "vision_stub":
+        extras["image_embeds"] = _sds(
+            (b, cfg.n_frontend_tokens, cfg.frontend_dim), jnp.bfloat16,
+            mesh, P(*bspec, None, None))
+    if cfg.frontend == "audio_stub":
+        extras["frame_embeds"] = _sds(
+            (b, s, cfg.frontend_dim), jnp.bfloat16,
+            mesh, P(*bspec, None, None))
+    return extras
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh=None
+                      ) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    s_text = s - (cfg.n_frontend_tokens if cfg.frontend == "vision_stub" else 0)
+    bspec = _batch_spec(mesh, b)
+    batch = {
+        "tokens": _sds((b, s_text), jnp.int32, mesh, P(*bspec, None)),
+        "labels": _sds((b, s_text), jnp.int32, mesh, P(*bspec, None)),
+    }
+    batch.update(token_extras(cfg, b, s, mesh))
+    return batch
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh=None
+                        ) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    s_text = s - (cfg.n_frontend_tokens if cfg.frontend == "vision_stub" else 0)
+    bspec = _batch_spec(mesh, b)
+    batch = {"tokens": _sds((b, s_text), jnp.int32, mesh, P(*bspec, None))}
+    batch.update(token_extras(cfg, b, s, mesh))
+    return batch
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh=None):
+    """(batch, caches, index) abstract inputs for one decode step."""
+    b, s_max = shape.global_batch, shape.seq_len
+    bspec = _batch_spec(mesh, b)
+    batch: Dict[str, Any] = {
+        "tokens": _sds((b, 1), jnp.int32, mesh, P(*bspec, None))}
+    if cfg.is_encdec:
+        batch["memory"] = _sds((b, 1024, cfg.d_model), jnp.bfloat16,
+                               mesh, P(*bspec, None, None))
+
+    caches = jax.eval_shape(lambda: M.init_caches(cfg, b, s_max))
+
+    def shard_cache(leaf):
+        if mesh is None:
+            return leaf
+        if leaf.ndim <= 2:
+            spec = P()
+        elif leaf.shape[1] == b and leaf.ndim >= 3:   # stacked (G,B,...)
+            spec = P(None, *bspec, *([None] * (leaf.ndim - 2)))
+        elif leaf.shape[0] == b:                       # tail (B, ...)
+            spec = P(*bspec, *([None] * (leaf.ndim - 1)))
+        else:
+            spec = P()
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    caches = jax.tree.map(shard_cache, caches)
+    index = _sds((), jnp.int32, mesh, P())
+    return batch, caches, index
+
+
+def abstract_state(cfg: ModelConfig, mesh=None):
+    """Abstract train state with ZeRO-1 shardings attached."""
+    from repro.train import train_step as ts
+    from repro.train import sharding_rules as rules
+
+    state = jax.eval_shape(
+        lambda: ts.init_state(jax.random.PRNGKey(0), cfg))
+    if mesh is None:
+        return state
+    sh = ts.state_shardings(state, mesh)
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        state, sh)
+
+
+def abstract_params(cfg: ModelConfig, mesh=None):
+    from repro.train import sharding_rules as rules
+    params = jax.eval_shape(
+        lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    if mesh is None:
+        return params
+    sh = rules.param_shardings(params, mesh)
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        params, sh)

@@ -1,0 +1,269 @@
+"""Mixture-of-Experts block with expert parallelism (EP).
+
+Design (TPU/XLA-friendly — every shape static):
+
+- router: softmax top-k over routed experts (+ optional always-on shared
+  experts implemented as a dense TP MLP).
+- dispatch: capacity-based.  Each token's top-k picks get a slot in a
+  per-expert capacity buffer via a cumsum-over-one-hot position
+  computation; overflow tokens are dropped (standard "token dropping").
+  Scatter/gather move only G*k rows — no O(G*E*C) dispatch einsums.
+- EP (train/prefill) runs in **pure GSPMD form** (works inside the
+  dp-manual Celeris train island, where a nested manual shard_map over
+  'model' is illegal): the sequence axis folds into a leading "sender
+  shard" dim constrained onto the model axis, per-sender dispatch runs
+  under vmap (batched scatters partition cleanly), and the
+  (TP,E,..) -> (E,TP,..) resharding constraint lowers to the EP
+  all-to-all.  With Celeris enabled, dispatch is *lossy*: a
+  (sender, expert-shard) block that misses the bounded window is
+  dropped before the reshard — the expert sees zeros (swiglu(0)=0) and
+  those tokens fall back to the shared-expert/residual path (paper
+  §II-B "expert fallback paths").
+- decode (S==1): local dispatch (tiny); expert weights stay E-sharded.
+- single-device fallback (smoke tests): local dense EP.
+
+Experts are zero-padded to a multiple of the model-axis size (dummy
+experts are unroutable: router logits forced to -inf).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding as shd
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, Any]
+
+
+EXPERT_PAD_MULTIPLE = 16   # fixed (= production TP degree) so param
+                           # shapes are mesh-independent (checkpoints
+                           # stay elastic across topologies)
+
+
+def padded_experts(cfg: ModelConfig, tp: int = EXPERT_PAD_MULTIPLE) -> int:
+    e = cfg.moe.n_experts
+    return -(-e // EXPERT_PAD_MULTIPLE) * EXPERT_PAD_MULTIPLE
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig, tp: int = 1) -> Params:
+    m = cfg.moe
+    d, f = cfg.d_model, m.d_expert
+    e_pad = padded_experts(cfg, tp)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+
+    def tn(k, shape, fan_in):
+        return (jax.random.truncated_normal(k, -2., 2., shape, jnp.float32)
+                * (fan_in ** -0.5)).astype(dt)
+
+    p: Params = {
+        "router": tn(ks[0], (d, e_pad), d).astype(jnp.float32),
+        "wi": tn(ks[1], (e_pad, d, f), d),
+        "wg": tn(ks[2], (e_pad, d, f), d),
+        "wo": tn(ks[3], (e_pad, f, d), f),
+    }
+    if m.n_shared:
+        fs = m.n_shared * m.d_expert
+        p["shared"] = {
+            "wi": tn(ks[4], (d, fs), d),
+            "wg": tn(jax.random.fold_in(ks[4], 1), (d, fs), d),
+            "wo": tn(jax.random.fold_in(ks[4], 2), (fs, d), fs),
+        }
+    return p
+
+
+def param_specs(cfg: ModelConfig) -> Params:
+    """PartitionSpecs for MoE params (experts sharded over model)."""
+    specs: Params = {
+        "router": P(),
+        "wi": P(shd.MODEL_AXIS, None, None),
+        "wg": P(shd.MODEL_AXIS, None, None),
+        "wo": P(shd.MODEL_AXIS, None, None),
+    }
+    if cfg.moe and cfg.moe.n_shared:
+        specs["shared"] = {"wi": P(None, shd.MODEL_AXIS),
+                           "wg": P(None, shd.MODEL_AXIS),
+                           "wo": P(shd.MODEL_AXIS, None)}
+    return specs
+
+
+def _capacity(cfg: ModelConfig, g_tokens: int, tp: int) -> int:
+    m = cfg.moe
+    c = int(g_tokens * m.top_k * m.capacity_factor) // padded_experts(cfg, tp)
+    return max(8, -(-c // 8) * 8)   # round up to 8 for TPU tiling
+
+
+def _route(p: Params, cfg: ModelConfig, x2d: jax.Array, e_pad: int):
+    """Top-k routing.  x2d: (G, d) -> (probs (G,k), ids (G,k), aux)."""
+    m = cfg.moe
+    logits = x2d.astype(jnp.float32) @ p["router"]
+    if e_pad > m.n_experts:   # dummy padded experts are unroutable
+        pad_mask = jnp.arange(e_pad) >= m.n_experts
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, m.top_k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    me = probs.mean(0)
+    ce = jnp.zeros((e_pad,)).at[top_i.reshape(-1)].add(1.0) / top_i.size
+    aux = (m.aux_weight * e_pad * jnp.sum(me * ce)
+           + m.router_z_weight * jnp.mean(
+               jnp.square(jax.nn.logsumexp(logits, axis=-1))))
+    return top_p, top_i, aux
+
+
+def _dispatch_indices(top_i: jax.Array, e_pad: int, cap: int):
+    """Slot assignment: (G,k) expert ids -> (flat ids, slots, keep mask)."""
+    flat = top_i.reshape(-1)                                   # (G*k,)
+    onehot = jax.nn.one_hot(flat, e_pad, dtype=jnp.int32)      # (G*k, E)
+    pos = (jnp.cumsum(onehot, axis=0) - 1) * onehot
+    slot = pos.sum(-1)                                         # (G*k,)
+    keep = slot < cap
+    return flat, slot, keep
+
+
+def _expert_ffn(wi, wg, wo, h: jax.Array) -> jax.Array:
+    """h: (E_local, C_total, d) -> same; batched swiglu per expert."""
+    a = jnp.einsum("ecd,edf->ecf", h, wg)
+    b = jnp.einsum("ecd,edf->ecf", h, wi)
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(a) * b, wo)
+
+
+def _scatter_combine(x2d, top_p, flat, slot, keep, out_buf, cap):
+    """Gather expert outputs back to token order, weighted by router."""
+    g, d = x2d.shape
+    k = top_p.shape[-1]
+    got = out_buf[flat, jnp.minimum(slot, cap - 1)]
+    got = got * (keep[:, None] * top_p.reshape(-1)[:, None]).astype(got.dtype)
+    return got.reshape(g, k, d).sum(1)
+
+
+def _moe_local(p, cfg, x2d, e_pad, cap):
+    """Single-device path (no EP collectives)."""
+    top_p, top_i, aux = _route(p, cfg, x2d, e_pad)
+    flat, slot, keep = _dispatch_indices(top_i, e_pad, cap)
+    k = cfg.moe.top_k
+    rows = jnp.repeat(x2d, k, axis=0) * keep[:, None].astype(x2d.dtype)
+    buf = jnp.zeros((e_pad, cap, x2d.shape[-1]), x2d.dtype)
+    buf = buf.at[flat, jnp.minimum(slot, cap - 1)].add(rows)
+    out_buf = _expert_ffn(p["wi"], p["wg"], p["wo"], buf)
+    return _scatter_combine(x2d, top_p, flat, slot, keep, out_buf, cap), aux
+
+
+def _dispatch_2d(p, cfg, x2d, e_pad, cap, src_mask=None):
+    """Route+dispatch a (G,d) token block into (E,C,d) capacity buffers.
+
+    ``src_mask`` (E,) optional arrival mask for this sender's blocks
+    (Celeris lossy dispatch: tokens bound for a dropped (sender, expert-
+    shard) block never arrive; swiglu(0)=0 so they contribute nothing
+    and fall back to shared-expert/residual).
+    Returns (buf, combine_fn, aux).
+    """
+    g, d = x2d.shape
+    k = cfg.moe.top_k
+    top_p, top_i, aux = _route(p, cfg, x2d, e_pad)
+    flat, slot, keep = _dispatch_indices(top_i, e_pad, cap)
+    if src_mask is not None:
+        keep = keep & src_mask[flat]
+    rows = jnp.repeat(x2d, k, axis=0) * keep[:, None].astype(x2d.dtype)
+    buf = jnp.zeros((e_pad, cap, d), x2d.dtype)
+    buf = buf.at[flat, jnp.minimum(slot, cap - 1)].add(rows)
+
+    def combine(out_buf):
+        return _scatter_combine(x2d, top_p, flat, slot, keep, out_buf, cap)
+
+    return buf, combine, aux
+
+
+def _constrain(x, spec):
+    mesh = shd.get_global_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec))
+
+
+def _moe_ep_gspmd(p, cfg, x, e_pad, tp, lossy, key, drop_rate):
+    """Expert parallelism in pure GSPMD (auto) form.
+
+    The sequence axis is folded into a leading "sender shard" dim that
+    rides the model axis; per-sender dispatch runs under vmap (batched
+    scatters partition cleanly), and the (TP,E,..) -> (E,TP,..)
+    resharding constraint lowers to the EP all-to-all.  Works both
+    inside the dp-manual train island and in plain serving jits.
+    """
+    from jax.sharding import PartitionSpec as P
+    b, s, d = x.shape
+    s_loc = s // tp
+    xs = x.reshape(b, tp, s_loc, d).swapaxes(0, 1).reshape(tp, b * s_loc, d)
+    xs = _constrain(xs, P(shd.MODEL_AXIS, None, None))
+    cap = _capacity(cfg, b * s_loc, tp)
+
+    if lossy:
+        # (sender, dest-shard) arrival coins -> expand to (sender, expert)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        coins = jax.random.uniform(key, (tp, tp)) >= drop_rate
+        src_masks = jnp.repeat(coins, e_pad // tp, axis=1)     # (TP, E)
+    else:
+        src_masks = jnp.ones((tp, e_pad), bool)
+
+    def one_sender(x2d, mask):
+        buf, _, aux = _dispatch_2d(p, cfg, x2d, e_pad, cap, src_mask=mask)
+        return buf, aux
+
+    bufs, auxs = jax.vmap(one_sender)(xs, src_masks)   # (TP,E,C,d)
+    bufs = _constrain(bufs, P(shd.MODEL_AXIS, None, None, None))
+
+    # ---- EP "all-to-all": reshard sender-major -> expert-major
+    h = bufs.swapaxes(0, 1)                            # (E,TP,C,d)
+    h = _constrain(h, P(shd.MODEL_AXIS, None, None, None))
+    h = h.reshape(e_pad, tp * cap, d)
+    out = _expert_ffn(p["wi"], p["wg"], p["wo"], h)    # E-sharded
+    out = _constrain(out, P(shd.MODEL_AXIS, None, None))
+
+    # ---- return path
+    back = out.reshape(e_pad, tp, cap, d).swapaxes(0, 1)
+    back = _constrain(back, P(shd.MODEL_AXIS, None, None, None))
+
+    def one_receiver(x2d, mask, out_buf):
+        # recompute indices (cheap) to combine; same routing as dispatch
+        _, combine, _ = _dispatch_2d(p, cfg, x2d, e_pad, cap, src_mask=mask)
+        return combine(out_buf)
+
+    ys = jax.vmap(one_receiver)(xs, src_masks, back)   # (TP, B*S_loc, d)
+    ys = _constrain(ys, P(shd.MODEL_AXIS, None, None))
+    y = ys.reshape(tp, b, s_loc, d).swapaxes(0, 1).reshape(b, s, d)
+    return y, auxs.mean()
+
+
+def moe_block(p: Params, cfg: ModelConfig, x: jax.Array, *,
+              lossy: bool = False,
+              key: Optional[jax.Array] = None,
+              drop_rate: jax.Array | float = 0.0,
+              ) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss).  Adds shared-expert output."""
+    mesh = shd.get_global_mesh()
+    tp = mesh.shape[shd.MODEL_AXIS] if mesh is not None else 1
+    e_pad = padded_experts(cfg, tp)
+    b, s, d = x.shape
+
+    if mesh is None or tp == 1 or s % tp or s < tp:
+        # single-device / decode path: local dispatch; expert weights may
+        # be sharded over E (GSPMD gathers them - tiny at decode sizes).
+        cap = _capacity(cfg, b * s, 1)
+        routed, aux = _moe_local(p, cfg, x.reshape(-1, d), e_pad, cap)
+        routed = routed.reshape(b, s, d)
+    else:
+        routed, aux = _moe_ep_gspmd(
+            p, cfg, x, e_pad, tp, lossy, key,
+            jnp.asarray(drop_rate, jnp.float32))
+
+    if "shared" in p:
+        sp = p["shared"]
+        shared = (jax.nn.silu(x @ sp["wg"]) * (x @ sp["wi"])) @ sp["wo"]
+        routed = routed + shared
+    return routed, aux

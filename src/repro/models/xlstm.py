@@ -1,0 +1,273 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, exponential gating, true recurrence).
+
+**mLSTM** — per head, with exponential input gate and stabilizer m:
+    C_t = f'_t C_{t-1} + i'_t v_t k_t^T      (d_k x d_v matrix memory)
+    n_t = f'_t n_{t-1} + i'_t k_t
+    h_t = (C_t^T q_t) / max(|n_t . q_t|, 1)
+Training uses the **chunkwise-parallel** form (quadratic inside chunks
+of length 64, recurrent state only at chunk boundaries) so scan-carry
+storage stays O(S/64 * d_k * d_v) instead of O(S * ...); decode is the
+exact sequential step.  The chunkwise path is validated against the
+sequential reference in tests.
+
+**sLSTM** — scalar memory with recurrent gate input R h_{t-1}
+(block-diagonal per head) — inherently sequential: ``lax.scan`` over
+time.  Exponential gating stabilized with m_t.
+
+Both carry their own up/down projections (assignment gives d_ff = 0).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, Any]
+CHUNK = 64
+
+
+def _tn(key, shape, fan_in, dt):
+    return (jax.random.truncated_normal(key, -2., 2., shape, jnp.float32)
+            * (fan_in ** -0.5)).astype(dt)
+
+
+# ======================================================================
+# mLSTM
+# ======================================================================
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=("c", "n", "m"), meta_fields=())
+@dataclasses.dataclass
+class MlstmCache:
+    c: jax.Array    # (B, H, Dk, Dv) matrix memory
+    n: jax.Array    # (B, H, Dk) normalizer
+    m: jax.Array    # (B, H) stabilizer
+
+
+def init_mlstm(key: jax.Array, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    di = 2 * d                       # up-projected inner width
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": _tn(ks[0], (d, di), d, dt),
+        "w_gate": _tn(ks[1], (d, di), d, dt),
+        "wq": _tn(ks[2], (di, di), di, dt),
+        "wk": _tn(ks[3], (di, di), di, dt),
+        "wv": _tn(ks[4], (di, di), di, dt),
+        "w_if": _tn(ks[5], (di, 2 * cfg.n_heads), di, jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((cfg.n_heads,)),
+                                 jnp.linspace(3.0, 6.0, cfg.n_heads)]),
+        "w_down": _tn(ks[6], (di, d), di, dt),
+    }
+
+
+def _mlstm_seq(q, k, v, logi, logf, c0, n0, m0):
+    """Sequential reference / decode step.  q,k,v: (B,S,H,Dk|Dv)."""
+    def step(carry, t):
+        c, n, m = carry
+        qt, kt, vt, li, lf = t
+        m_new = jnp.maximum(lf + m, li)
+        fp = jnp.exp(lf + m - m_new)[..., None, None]
+        ip = jnp.exp(li - m_new)[..., None, None]
+        c = fp * c + ip * (kt[..., :, None] * vt[..., None, :])
+        n = fp[..., 0] * n + ip[..., 0] * kt
+        num = jnp.einsum("bhkv,bhk->bhv", c, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)), 1.0)
+        return (c, n, m_new), num / den[..., None]
+
+    xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+          logi.swapaxes(0, 1), logf.swapaxes(0, 1))
+    (c, n, m), hs = jax.lax.scan(step, (c0, n0, m0), xs)
+    return hs.swapaxes(0, 1), (c, n, m)
+
+
+def mlstm_parallel(q, k, v, logi, logf, c0, n0, m0):
+    """Chunkwise-parallel mLSTM (clean implementation)."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    nc = s // CHUNK
+
+    def r(x):
+        return x.reshape(b, nc, CHUNK, *x.shape[2:]).swapaxes(0, 1)
+
+    q_, k_, v_ = r(q), r(k), r(v)                   # (nc,B,L,H,D*)
+    li, lf = r(logi), r(logf)                       # (nc,B,L,H)
+
+    def scan_chunk(carry, t):
+        c, n, m = carry
+        qc, kc, vc, lic, lfc = t                    # (B,L,H,*) / (B,L,H)
+        csf = jnp.cumsum(lfc, axis=1)               # (B,L,H) inclusive
+        ftot = csf[:, -1]                           # (B,H)
+
+        # intra weights w[j,l] = csf[j]-csf[l]+li[l] for l<=j
+        ac = csf[:, :, None, :] - csf[:, None, :, :] + lic[:, None, :, :]
+        mask = jnp.arange(CHUNK)[:, None] >= jnp.arange(CHUNK)[None, :]
+        ac = jnp.where(mask[None, :, :, None], ac, -1e30)
+        b_in = csf + m[:, None, :]                  # (B,L,H) carry weight
+        m_j = jnp.maximum(jnp.max(ac, axis=2), b_in)
+        w_intra = jnp.exp(ac - m_j[:, :, None, :])
+        w_carry = jnp.exp(b_in - m_j)
+
+        scores = jnp.einsum("bjhd,blhd->bjlh", qc.astype(jnp.float32),
+                            kc.astype(jnp.float32))
+        num = (jnp.einsum("bjlh,bjlh,blhv->bjhv", scores, w_intra,
+                          vc.astype(jnp.float32))
+               + jnp.einsum("bhkv,bjhk->bjhv", c, qc.astype(jnp.float32))
+               * w_carry[..., None])
+        den = (jnp.einsum("bjlh,bjlh,blhd,bjhd->bjh", scores, w_intra,
+                          kc.astype(jnp.float32), qc.astype(jnp.float32))
+               + jnp.einsum("bhk,bjhk->bjh", n, qc.astype(jnp.float32))
+               * w_carry)
+        h_out = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+
+        # ---- state to chunk end (stabilized)
+        wl = ftot[:, None, :] - csf + lic            # (B,L,H)
+        m_state = jnp.maximum(ftot + m, jnp.max(wl, axis=1))
+        w_new = jnp.exp(wl - m_state[:, None, :])    # (B,L,H)
+        w_old = jnp.exp(ftot + m - m_state)          # (B,H)
+        c_new = (w_old[..., None, None] * c
+                 + jnp.einsum("blh,blhk,blhv->bhkv", w_new,
+                              kc.astype(jnp.float32), vc.astype(jnp.float32)))
+        n_new = (w_old[..., None] * n
+                 + jnp.einsum("blh,blhk->bhk", w_new, kc.astype(jnp.float32)))
+        return (c_new, n_new, m_state), h_out
+
+    (c, n, m), hs = jax.lax.scan(
+        scan_chunk, (c0, n0, m0), (q_, k_, v_, li, lf))
+    hs = hs.swapaxes(0, 1).reshape(b, s, h, dv)
+    return hs, (c, n, m)
+
+
+def mlstm_block(p: Params, cfg: ModelConfig, x: jax.Array, *,
+                cache: Optional[MlstmCache] = None,
+                ) -> tuple[jax.Array, Optional[MlstmCache]]:
+    b, s, d = x.shape
+    hh = cfg.n_heads
+    gate = jax.nn.silu(x @ p["w_gate"])
+    u = x @ p["w_up"]
+    di = u.shape[-1]
+    dh = di // hh
+    q = (u @ p["wq"]).reshape(b, s, hh, dh) * dh ** -0.5
+    k = (u @ p["wk"]).reshape(b, s, hh, dh) * dh ** -0.5
+    v = (u @ p["wv"]).reshape(b, s, hh, dh)
+    gates = u.astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    logi, logf = gates[..., :hh], jax.nn.log_sigmoid(gates[..., hh:])
+
+    if cache is not None:
+        c0, n0, m0 = cache.c, cache.n, cache.m
+    else:
+        c0 = jnp.zeros((b, hh, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, hh, dh), jnp.float32)
+        m0 = jnp.zeros((b, hh), jnp.float32)
+
+    if s == 1:
+        hs, (c, n, m) = _mlstm_seq(q, k, v, logi, logf, c0, n0, m0)
+    else:
+        pad = (-s) % CHUNK
+        if pad:
+            zp = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+            q, k, v = zp(q), zp(k), zp(v)
+            logi = jnp.pad(logi, ((0, 0), (0, pad), (0, 0)),
+                           constant_values=-1e30)   # pad tokens never write
+            logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+        hs, (c, n, m) = mlstm_parallel(q, k, v, logi, logf, c0, n0, m0)
+        hs = hs[:, :s]
+    new_cache = MlstmCache(c=c, n=n, m=m) if cache is not None else None
+    out = (hs.reshape(b, s, di).astype(gate.dtype) * gate) @ p["w_down"]
+    return out, new_cache
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int) -> MlstmCache:
+    dh = 2 * cfg.d_model // cfg.n_heads
+    return MlstmCache(
+        c=jnp.zeros((batch, cfg.n_heads, dh, dh), jnp.float32),
+        n=jnp.zeros((batch, cfg.n_heads, dh), jnp.float32),
+        m=jnp.zeros((batch, cfg.n_heads), jnp.float32))
+
+
+# ======================================================================
+# sLSTM
+# ======================================================================
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=("h", "c", "n", "m"), meta_fields=())
+@dataclasses.dataclass
+class SlstmCache:
+    h: jax.Array    # (B, D)
+    c: jax.Array    # (B, D)
+    n: jax.Array    # (B, D)
+    m: jax.Array    # (B, D)
+
+
+def init_slstm(key: jax.Array, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    hh = cfg.n_heads
+    dh = d // hh
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    return {
+        "w_x": _tn(ks[0], (d, 4 * d), d, dt),
+        "r_h": _tn(ks[1], (hh, dh, 4 * dh), dh, jnp.float32),
+        "b": jnp.concatenate([jnp.zeros((2 * d,)),
+                              jnp.linspace(3.0, 6.0, d),      # forget bias
+                              jnp.zeros((d,))]),
+        "w_up1": _tn(ks[2], (d, 2 * d), d, dt),
+        "w_up2": _tn(ks[3], (d, 2 * d), d, dt),
+        "w_down": _tn(ks[4], (2 * d, d), 2 * d, dt),
+    }
+
+
+def _slstm_cell(p, cfg, xg, state):
+    """One step.  xg: (B, 4D) precomputed x-part; state: SlstmCache."""
+    d = cfg.d_model
+    hh = cfg.n_heads
+    dh = d // hh
+    h, c, n, m = state
+    rec = jnp.einsum("bhd,hdk->bhk", h.reshape(-1, hh, dh),
+                     p["r_h"]).reshape(-1, 4 * d)
+    g = xg.astype(jnp.float32) + rec + p["b"]
+    zt = jnp.tanh(g[:, 0 * d:1 * d])
+    it = g[:, 1 * d:2 * d]                       # log-space input gate
+    ft = jax.nn.log_sigmoid(g[:, 2 * d:3 * d])   # log forget
+    ot = jax.nn.sigmoid(g[:, 3 * d:4 * d])
+    m_new = jnp.maximum(ft + m, it)
+    ip = jnp.exp(it - m_new)
+    fp = jnp.exp(ft + m - m_new)
+    c_new = fp * c + ip * zt
+    n_new = fp * n + ip
+    h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+    return h_new, c_new, n_new, m_new
+
+
+def slstm_block(p: Params, cfg: ModelConfig, x: jax.Array, *,
+                cache: Optional[SlstmCache] = None,
+                ) -> tuple[jax.Array, Optional[SlstmCache]]:
+    b, s, d = x.shape
+    xg = x @ p["w_x"]                              # (B,S,4D)
+    if cache is not None:
+        st = (cache.h, cache.c, cache.n, cache.m)
+    else:
+        z = jnp.zeros((b, d), jnp.float32)
+        st = (z, z, z - 1e30 * 0, z)               # m starts at 0
+
+    def step(carry, xt):
+        new = _slstm_cell(p, cfg, xt, carry)
+        return new, new[0]
+
+    st_new, hs = jax.lax.scan(step, st, xg.swapaxes(0, 1))
+    hs = hs.swapaxes(0, 1).astype(x.dtype)         # (B,S,D)
+    new_cache = SlstmCache(*st_new) if cache is not None else None
+    out = (jax.nn.silu(hs @ p["w_up1"]) * (hs @ p["w_up2"])) @ p["w_down"]
+    return out, new_cache
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int) -> SlstmCache:
+    z = jnp.zeros((batch, cfg.d_model), jnp.float32)
+    return SlstmCache(h=z, c=z, n=z, m=z)

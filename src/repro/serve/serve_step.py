@@ -1,0 +1,72 @@
+"""Serving: prefill + decode step factories.
+
+- ``make_prefill``: (params, batch) -> (last-position logits, caches).
+- ``make_decode``: (params, caches, tokens (B,1), index) -> (logits,
+  caches) — one new token against a KV cache / recurrent state of
+  ``s_max``; this is what the ``decode_32k`` / ``long_500k`` dry-run
+  cells lower.
+
+Sharding: batch over dp axes, params TP over 'model' (GSPMD).  KV-cache
+heads are *not* forced onto the model axis (kv counts like 2 or 8 don't
+divide 16); caches shard over batch, which is where decode parallelism
+lives (the attention einsum for one token is bandwidth-bound on the
+cache read, linear in B).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+
+def make_prefill(cfg: ModelConfig, s_max: int):
+    def prefill(params, batch):
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        caches = M.init_caches(cfg, b, s_max)
+        n_front = (cfg.n_frontend_tokens
+                   if cfg.frontend == "vision_stub" else 0)
+        positions = jnp.arange(tokens.shape[1] + n_front,
+                               dtype=jnp.int32)[None, :]
+        logits, caches, _ = M.forward(params, cfg, batch, caches=caches,
+                                      positions=positions, remat=False,
+                                      last_only=True)
+        return logits[:, -1], caches
+    return jax.jit(prefill)
+
+
+def make_decode(cfg: ModelConfig):
+    def decode(params, caches, batch, index):
+        """index: scalar int32 — the position being generated."""
+        positions = jnp.full((batch["tokens"].shape[0], 1), index,
+                             dtype=jnp.int32)
+        memory = batch.get("memory")       # enc-dec cross-attention
+        logits, caches, _ = M.forward(
+            params, cfg, {"tokens": batch["tokens"]}, caches=caches,
+            cache_index=index, positions=positions, memory=memory,
+            remat=False)
+        return logits[:, -1], caches
+    return jax.jit(decode, donate_argnums=(1,))
+
+
+def greedy_generate(cfg: ModelConfig, params, prompt: jax.Array,
+                    n_steps: int, s_max: Optional[int] = None,
+                    extra: Optional[Dict[str, Any]] = None):
+    """Small host-loop generator for examples/tests (greedy)."""
+    s_max = s_max or (prompt.shape[1] + n_steps)
+    batch = {"tokens": prompt, **(extra or {})}
+    prefill = make_prefill(cfg, s_max)
+    decode = make_decode(cfg)
+    logits, caches = prefill(params, batch)
+    out = [jnp.argmax(logits, -1)[:, None]]
+    idx = prompt.shape[1]
+    for t in range(n_steps - 1):
+        logits, caches = decode(params, caches,
+                                {"tokens": out[-1]}, jnp.int32(idx))
+        out.append(jnp.argmax(logits, -1)[:, None])
+        idx += 1
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,48 @@
+"""Mesh / shard_map compatibility shims (JAX 0.8.x)."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+try:  # jax >= 0.8: top-level shard_map
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover - older jax
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+
+def make_mesh(shape: Sequence[int], axis_names: Sequence[str]) -> jax.sharding.Mesh:
+    """jax.make_mesh with the pre-0.9 Auto axis-type behavior pinned."""
+    return jax.make_mesh(
+        tuple(shape), tuple(axis_names),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+
+
+# ----------------------------------------------------------------------
+# Ambient mesh registry: model code (e.g. the MoE expert-parallel island)
+# needs the mesh to open shard_map regions inside a jitted step.  When no
+# mesh is set (single-device smoke tests), layers fall back to local-only
+# implementations.
+# ----------------------------------------------------------------------
+
+_GLOBAL_MESH: jax.sharding.Mesh | None = None
+
+
+def set_global_mesh(mesh: jax.sharding.Mesh | None) -> None:
+    global _GLOBAL_MESH
+    _GLOBAL_MESH = mesh
+
+
+def get_global_mesh() -> jax.sharding.Mesh | None:
+    return _GLOBAL_MESH
+
+
+def dp_axes(mesh: jax.sharding.Mesh | None = None) -> tuple[str, ...]:
+    """Data-parallel axes of the production meshes ('pod' composes)."""
+    mesh = mesh or _GLOBAL_MESH
+    if mesh is None:
+        return ()
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+MODEL_AXIS = "model"

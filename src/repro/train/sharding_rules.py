@@ -1,0 +1,177 @@
+"""PartitionSpec rules (GSPMD) for params, optimizer state, and batches.
+
+TP policy (megatron-style over the ``model`` axis):
+- attention/MLP in-projections: column-parallel  P(..., None, "model")
+- out-projections: row-parallel                  P(..., "model", None)
+- embedding: vocab-sharded; unembed column-parallel
+- MoE experts: expert-sharded (EP) via moe.param_specs
+- norms / small diagonals: replicated
+
+ZeRO-1: optimizer-state leaves additionally shard their largest
+dp-divisible dimension over ``data`` (master/mu/nu are fp32 — the
+dominant memory term at 12 bytes/param).
+
+Stacked layer groups (leading n_groups dim from the scan) get a None
+prepended automatically: rules match on the *path string*.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import sharding as shd
+
+# (path regex, spec builder given leaf ndim) — first match wins.
+# Specs are written for the UNSTACKED leaf; leading extra dims -> None.
+_RULES = [
+    # embedding
+    (r"embed.*table", lambda nd: ("model", None)),
+    (r"embed.*unembed", lambda nd: (None, "model")),
+    (r"frontend_proj", lambda nd: (None, "model")),
+    # attention
+    (r"\['attn'\].*w[qkv]", lambda nd: (None, "model")),
+    (r"\['attn'\].*wo", lambda nd: ("model", None)),
+    (r"\['xattn'\].*w[qkv]", lambda nd: (None, "model")),
+    (r"\['xattn'\].*wo", lambda nd: ("model", None)),
+    (r"\['attn'\].*b[qkv]", lambda nd: ("model",)),
+    (r"\['xattn'\].*b[qkv]", lambda nd: ("model",)),
+    # dense mlp
+    (r"\['mlp'\].*w[ig]", lambda nd: (None, "model")),
+    (r"\['mlp'\].*wo", lambda nd: ("model", None)),
+    # moe (expert-sharded; shared experts like dense mlp)
+    (r"\['moe'\].*shared.*w[ig]", lambda nd: (None, "model")),
+    (r"\['moe'\].*shared.*wo", lambda nd: ("model", None)),
+    (r"\['moe'\].*router", lambda nd: (None, None)),
+    (r"\['moe'\].*w[igo]", lambda nd: ("model", None, None)),
+    # rglru
+    (r"\['rglru'\].*w_in", lambda nd: (None, "model")),
+    (r"\['rglru'\].*w_gate", lambda nd: (None, "model")),
+    (r"\['rglru'\].*w_out", lambda nd: ("model", None)),
+    (r"\['rglru'\].*conv_[wb]", lambda nd: (None, "model")[-nd:]),
+    (r"\['rglru'\].*(gate_._[wb]|lam)", lambda nd: ("model",)),
+    # xlstm
+    (r"\['mlstm'\].*w_(up|gate)", lambda nd: (None, "model")),
+    (r"\['mlstm'\].*w[qkv]", lambda nd: (None, "model")),
+    (r"\['mlstm'\].*w_down", lambda nd: ("model", None)),
+    (r"\['slstm'\].*w_x", lambda nd: (None, "model")),
+    (r"\['slstm'\].*w_up[12]", lambda nd: (None, "model")),
+    (r"\['slstm'\].*w_down", lambda nd: ("model", None)),
+]
+
+
+def _spec_for(path: str, shape, mesh) -> P:
+    ndim = len(shape)
+    for pat, builder in _RULES:
+        if re.search(pat, path):
+            spec = list(builder(ndim))
+            # stacked group leading dims
+            while len(spec) < ndim:
+                spec.insert(0, None)
+            spec = spec[:ndim]
+            # divisibility guard: replicate dims the axis doesn't divide
+            # (e.g. seamless vocab 256206 % 16 != 0)
+            out = []
+            for s, n in zip(spec, shape):
+                if s is not None and n % mesh.shape.get(s, 1) != 0:
+                    s = None
+                out.append(s)
+            return P(*out)
+    return P()   # replicated (norms, biases, scalars)
+
+
+def param_specs(params: Any, mesh) -> Any:
+    """Pytree of PartitionSpec matching ``params``."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    specs = []
+    for path, leaf in flat:
+        specs.append(_spec_for(jax.tree_util.keystr(path), leaf.shape, mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(params: Any, mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, mesh),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def zero1_specs(params: Any, mesh) -> Any:
+    """Optimizer-state specs: param spec + 'data' on the largest free,
+    divisible dim (ZeRO-1)."""
+    pspecs = param_specs(params, mesh)
+    dp = [a for a in ("data",) if a in mesh.shape]
+    dp_size = mesh.shape.get("data", 1)
+
+    def add_data(leaf, spec):
+        if not dp or leaf.ndim == 0:
+            return spec
+        parts = list(spec) + [None] * (leaf.ndim - len(spec))
+        # pick largest dim that is unsharded and divisible by dp
+        best, best_dim = -1, -1
+        for i, (s, n) in enumerate(zip(parts, leaf.shape)):
+            if s is None and n % dp_size == 0 and n > best:
+                best, best_dim = n, i
+        if best_dim >= 0:
+            parts[best_dim] = "data"
+        return P(*parts)
+
+    flat_p = jax.tree_util.tree_leaves(params)
+    flat_s = jax.tree_util.tree_leaves(
+        pspecs, is_leaf=lambda x: isinstance(x, P))
+    treedef = jax.tree_util.tree_structure(params)
+    return jax.tree_util.tree_unflatten(
+        treedef, [add_data(l, s) for l, s in zip(flat_p, flat_s)])
+
+
+def opt_state_shardings(opt_state: Any, params: Any, mesh) -> Any:
+    z = zero1_specs(params, mesh)
+    ns = lambda s: NamedSharding(mesh, s)
+    return {
+        "master": jax.tree.map(ns, z, is_leaf=lambda x: isinstance(x, P)),
+        "mu": jax.tree.map(ns, z, is_leaf=lambda x: isinstance(x, P)),
+        "nu": jax.tree.map(ns, z, is_leaf=lambda x: isinstance(x, P)),
+        "count": NamedSharding(mesh, P()),
+    }
+
+
+def batch_specs(mesh, batch: Any) -> Any:
+    dp = shd.dp_axes(mesh)
+    return jax.tree.map(lambda a: P(dp, *([None] * (a.ndim - 1))), batch)
+
+
+def cache_specs(mesh, caches: Any) -> Any:
+    """KV caches / recurrent state: batch over dp.
+
+    Cache leaves are stacked (n_groups, B, ...) or plain (B, ...); the
+    (S_cache,) pos arrays are replicated.  We shard the batch dim, which
+    is dim 0 for tail caches and dim 1 for stacked group caches — picked
+    by matching known layouts.
+    """
+    dp = shd.dp_axes(mesh)
+
+    def spec(leaf):
+        if leaf.ndim <= 1:
+            return P()
+        # stacked group caches: (n_groups, B, ...); tail: (B, ...)
+        return P(None, dp, *([None] * (leaf.ndim - 2)))
+
+    # group caches get (n_groups,) leading; tail caches don't.  We mark
+    # by path: ['groups'] vs ['tail'].
+    flat = jax.tree_util.tree_flatten_with_path(caches)[0]
+    treedef = jax.tree_util.tree_structure(caches)
+    specs = []
+    for path, leaf in flat:
+        ps = jax.tree_util.keystr(path)
+        if leaf.ndim <= 1:
+            specs.append(P())
+        elif "'groups'" in ps:
+            if leaf.ndim == 2:   # (n_groups, S_cache) pos arrays
+                specs.append(P())
+            else:
+                specs.append(P(None, dp, *([None] * (leaf.ndim - 2))))
+        else:
+            specs.append(P(dp, *([None] * (leaf.ndim - 1))))
+    return jax.tree_util.tree_unflatten(treedef, specs)

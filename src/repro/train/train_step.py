@@ -1,0 +1,272 @@
+"""Train-step factory: GSPMD TP/SP + manual-DP Celeris gradient sync.
+
+Structure of one step (all inside a single jit):
+
+1. **shard_map island, manual over the dp axes ('pod','data'), auto
+   (GSPMD) over 'model'** — each dp shard runs value_and_grad on its
+   local batch; tensor-parallel math inside is auto-partitioned (params
+   enter with their GSPMD 'model' shardings; in_specs only name the
+   manual dp axes, so every param spec is P() = dp-replicated).
+2. **gradient sync over dp**: either exact ``pmean`` (baseline:
+   XLA's lossless all-reduce, RoCE-like semantics) or **Celeris lossy
+   pmean** — per-leaf randomized-Hadamard encode (wire-interleaved),
+   per-(peer, wire-row) arrival masks drawn from the step's drop
+   probability (driven by the timeout controller / transport model),
+   count-unbiased decode.  The realized received fraction is returned
+   for the controller.  Sharding hint: rotation blocks ride the 'model'
+   axis so the FWHT is collective-free and nothing de-shards.
+3. optimizer update (AdamW, fp32 master, ZeRO-1-sharded state) under
+   plain GSPMD.
+
+The factory precomputes the per-leaf Hadamard coding plans from the
+static param shapes (block counts padded to the TP degree).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import sharding as shd
+from repro.configs.base import ModelConfig
+from repro.core import coding
+from repro.core import lossy_collectives as lc
+from repro.models import model as M
+from repro.optim import adamw
+from repro.train import sharding_rules as rules
+
+
+@dataclasses.dataclass(frozen=True)
+class CelerisConfig:
+    """Celeris integration knobs for training."""
+    enabled: bool = False            # lossy DP gradient sync
+    lossy_moe: bool = False          # lossy expert-parallel All-to-All
+    n_rot: int = 4096                # Hadamard rotation width
+    use_pallas: bool = False         # FWHT via Pallas kernel (TPU) vs jnp
+    min_coded_size: int = 65536      # leaves smaller than this sync exactly
+    wire_dtype: str = "float32"      # collective payload dtype.  H3: set
+                                     # "bfloat16" on TPU to halve DP sync
+                                     # bytes (decode stays f32).  Default
+                                     # f32: XLA *CPU*'s AllReducePromotion
+                                     # pass crashes on mixed-dtype variadic
+                                     # all-reduces (see dryrun.py flags).
+    quantize_wire: bool = False      # H6 (beyond-paper): int8-quantized
+                                     # wire with shared per-row scales,
+                                     # summed over dp in int16 -> 2x fewer
+                                     # collective bytes than f32 (max peer
+                                     # sum 16*127 < 2^15).  Composes with
+                                     # the Hadamard rotation (QSGD-style:
+                                     # rotation whitens the per-row range
+                                     # so one scale fits all peers).
+
+
+def _sync_grads_exact(grads, dp):
+    # reduce in f32: uniform collective dtype (XLA CPU's AllReducePromotion
+    # crashes on mixed-dtype variadic all-reduce) and better accumulation.
+    sync = lambda g: jax.lax.pmean(g.astype(jnp.float32), dp).astype(g.dtype)
+    return jax.tree.map(sync, grads), jnp.float32(1.0)
+
+
+def _sync_grads_celeris(grads, dp, plans, key, drop_rate, celeris, mesh):
+    """Per-leaf lossy pmean with Hadamard recovery (sharding-aware ND
+    form: rotation runs along each leaf's unsharded axes only, so no
+    reshape ever crosses the TP sharding — see coding.encode_nd)."""
+    flat, treedef = jax.tree_util.tree_flatten(grads)
+    n_dp = 1
+    for ax in dp:
+        n_dp *= mesh.shape[ax] if mesh is not None else 1
+    out, fracs = [], []
+    for i, (g, plan) in enumerate(zip(flat, plans)):
+        if plan is None:   # small leaf: exact sync (f32, see exact path)
+            out.append(jax.lax.pmean(g.astype(jnp.float32), dp)
+                       .astype(g.dtype))
+            continue
+        signs = coding.rademacher_nd(jax.random.fold_in(key, 2 * i), plan)
+        tiles = coding.encode_nd(g, signs, plan)
+        mask = lc.arrival_mask(
+            lc._peer_key(jax.random.fold_in(key, 2 * i + 1), dp),
+            plan.n_rot, drop_rate)
+        contrib = tiles * mask[None, :, None].astype(tiles.dtype)
+        if celeris.quantize_wire:
+            # shared scale per wire row: psum-max of |contrib| so every
+            # peer's int8 payload lives on one grid (tiny f32 pre-pass:
+            # n_rot scalars per leaf)
+            absmax = jax.lax.pmax(
+                jnp.max(jnp.abs(contrib), axis=(0, 2)), dp)      # (n_rot,)
+            scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+            noise = jax.random.uniform(
+                jax.random.fold_in(key, 3 * i + 2), contrib.shape)
+            q = jnp.clip(jnp.floor(contrib / scale[None, :, None] + noise),
+                         -127, 127).astype(jnp.int16)
+            tiles_sum = (jax.lax.psum(q, dp).astype(jnp.float32)
+                         * scale[None, :, None])
+        else:
+            contrib = contrib.astype(jnp.dtype(celeris.wire_dtype))
+            tiles_sum = jax.lax.psum(contrib, dp).astype(jnp.float32)
+        counts = jax.lax.psum(mask.astype(jnp.float32), dp)
+        est = coding.decode_nd(tiles_sum, counts, signs, plan,
+                               total_peers=n_dp)
+        out.append((est / n_dp).astype(g.dtype))
+        fracs.append(jnp.sum(counts) / (n_dp * plan.n_rot))
+    frac = jnp.stack(fracs).mean() if fracs else jnp.float32(1.0)
+    return jax.tree_util.tree_unflatten(treedef, out), frac
+
+
+def make_train_step(cfg: ModelConfig, mesh, opt_cfg: adamw.OptConfig,
+                    celeris: Optional[CelerisConfig] = None,
+                    donate: bool = True, microbatches: int = 1):
+    """Returns jitted ``step(state, batch, key, drop_rate) -> (state, metrics)``.
+
+    state = {"params", "opt", "step"}; batch = {"tokens","labels",...}.
+    ``microbatches > 1``: gradient accumulation — the local batch is
+    split and scanned, dividing activation memory by the count (the
+    standard way multi-billion-param train cells fit HBM); the (lossy)
+    gradient sync still happens once per step on the accumulated grads.
+    """
+    celeris = celeris or CelerisConfig()
+    dp = shd.dp_axes(mesh)
+    tp = mesh.shape.get(shd.MODEL_AXIS, 1) if mesh is not None else 1
+
+    def _grads_one(params, batch, key, drop_rate):
+        lossy_ctx = M.LossyCtx(enabled=celeris.lossy_moe, key=key,
+                               drop_rate=drop_rate)
+
+        def loss_fn(p):
+            return M.lm_loss(p, cfg, batch, lossy=lossy_ctx)
+
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def island(params, batch, key, drop_rate, plans):
+        if microbatches > 1:
+            mb = jax.tree.map(
+                lambda a: a.reshape((microbatches,
+                                     a.shape[0] // microbatches)
+                                    + a.shape[1:]), batch)
+
+            def mb_step(carry, xs):
+                gacc, lacc, nacc, aacc = carry
+                b_i, i = xs
+                (l, (n, a_)), g = _grads_one(
+                    params, b_i, jax.random.fold_in(key, i), drop_rate)
+                gacc = jax.tree.map(
+                    lambda x, y: x + y.astype(jnp.float32), gacc, g)
+                return (gacc, lacc + l, nacc + n, aacc + a_), None
+
+            g0 = jax.tree.map(
+                lambda p_: jnp.zeros(p_.shape, jnp.float32), params)
+            z = jnp.zeros((), jnp.float32)
+            (gsum, loss, nll, aux), _ = jax.lax.scan(
+                mb_step, (g0, z, z, z), (mb, jnp.arange(microbatches)))
+            inv = 1.0 / microbatches
+            grads = jax.tree.map(
+                lambda g_, p_: (g_ * inv).astype(p_.dtype), gsum, params)
+            loss, nll, aux = loss * inv, nll * inv, aux * inv
+        else:
+            (loss, (nll, aux)), grads = _grads_one(params, batch, key,
+                                                   drop_rate)
+
+        if celeris.enabled:
+            grads, frac = _sync_grads_celeris(grads, dp, plans, key,
+                                              drop_rate, celeris, mesh)
+        else:
+            grads, frac = _sync_grads_exact(grads, dp)
+        loss = jax.lax.pmean(loss, dp)
+        nll = jax.lax.pmean(nll, dp)
+        aux = jax.lax.pmean(aux, dp)
+        return loss, nll, aux, grads, frac
+
+    def train_step(state, batch, key, drop_rate):
+        params = state["params"]
+        flat = jax.tree_util.tree_leaves(params)
+        if mesh is not None:
+            pspecs = rules.param_specs(params, mesh)
+            flat_specs = jax.tree_util.tree_leaves(
+                pspecs, is_leaf=lambda x: isinstance(x, P))
+        else:
+            flat_specs = [P()] * len(flat)
+
+        def sharded_dim(leaf, spec):
+            for i, sname in enumerate(spec):
+                if sname == shd.MODEL_AXIS and i < leaf.ndim:
+                    return i
+            return None
+
+        plans = [coding.plan_nd(l.shape, sharded_dim(l, sp), celeris.n_rot)
+                 if l.size >= celeris.min_coded_size else None
+                 for l, sp in zip(flat, flat_specs)]
+
+        if dp:
+            # params/grads are dp-replicated: every in/out spec is P();
+            # their 'model' shardings ride through the auto axis.
+            rep = jax.tree.map(lambda _: P(), params)
+            fn = functools.partial(island, plans=plans)
+            loss, nll, aux, grads, frac = shd.shard_map(
+                fn, mesh=mesh,
+                in_specs=(rep, rules.batch_specs(mesh, batch), P(), P()),
+                out_specs=(P(), P(), P(), rep, P()),
+                axis_names=set(dp), check_vma=False,
+            )(params, batch, key, drop_rate)
+        else:   # single-device / no-dp path
+            lossy_ctx = M.LossyCtx(enabled=celeris.lossy_moe, key=key,
+                                   drop_rate=drop_rate)
+            (loss, (nll, aux)), grads = jax.value_and_grad(
+                lambda p: M.lm_loss(p, cfg, batch, lossy=lossy_ctx),
+                has_aux=True)(params)
+            if celeris.enabled:
+                # no dp axis to lose data across, but the node itself
+                # still receives only (1 - drop_rate) of each collective
+                # payload inside its bounded window: emulate via
+                # single-peer encode -> mask -> unbiased decode (this is
+                # what the Fig.-1 loss-tolerance benchmark measures).
+                flat, tdef = jax.tree_util.tree_flatten(grads)
+                out, fr = [], []
+                for i, (g, plan) in enumerate(zip(flat, plans)):
+                    if plan is None:
+                        out.append(g)
+                        continue
+                    signs = coding.rademacher_nd(
+                        jax.random.fold_in(key, 2 * i), plan)
+                    tiles = coding.encode_nd(g, signs, plan)
+                    mask = lc.arrival_mask(
+                        jax.random.fold_in(key, 2 * i + 1),
+                        plan.n_rot, drop_rate)
+                    est = coding.decode_nd(
+                        tiles * mask[None, :, None].astype(tiles.dtype),
+                        mask.astype(jnp.float32), signs, plan,
+                        total_peers=1)
+                    out.append(est.astype(g.dtype))
+                    fr.append(mask.mean())
+                grads = jax.tree_util.tree_unflatten(tdef, out)
+                frac = jnp.stack(fr).mean() if fr else jnp.float32(1.0)
+            else:
+                frac = jnp.float32(1.0)
+
+        new_params, new_opt, om = adamw.apply_updates(
+            params, grads, state["opt"], opt_cfg)
+        metrics = {"loss": loss, "nll": nll, "aux": aux,
+                   "recv_frac": frac, **om}
+        return {"params": new_params, "opt": new_opt,
+                "step": state["step"] + 1}, metrics
+
+    donate_args = (0,) if donate else ()
+    return jax.jit(train_step, donate_argnums=donate_args)
+
+
+def init_state(key, cfg: ModelConfig):
+    params = M.init_params(key, cfg)
+    opt = adamw.init_opt_state(params)
+    return {"params": params, "opt": opt, "step": jnp.zeros((), jnp.int32)}
+
+
+def state_shardings(state, mesh):
+    """NamedShardings for the full train state on ``mesh``."""
+    ps = rules.param_shardings(state["params"], mesh)
+    return {
+        "params": ps,
+        "opt": rules.opt_state_shardings(state["opt"], state["params"], mesh),
+        "step": NamedSharding(mesh, P()),
+    }

@@ -1,0 +1,4 @@
+import os
+# Smoke tests and benches must see 1 device (the dry-run sets its own
+# 512-device flag in its own process) — never set device-count here.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

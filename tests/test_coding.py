@@ -1,0 +1,93 @@
+"""Hadamard / XOR recovery invariants (hypothesis property tests)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import coding
+
+
+@hypothesis.given(st.integers(10, 30000))
+@hypothesis.settings(max_examples=15, deadline=None)
+def test_lossless_roundtrip(n):
+    x = jax.random.normal(jax.random.PRNGKey(n), (n,))
+    code = coding.plan(n)
+    signs = coding.rademacher(jax.random.PRNGKey(1), code)
+    wire = coding.encode(x, signs, code)
+    assert wire.shape == code.wire_shape
+    xhat = coding.decode(wire, jnp.ones((code.n_rot,)), signs, code)
+    np.testing.assert_allclose(np.asarray(xhat), np.asarray(x),
+                               rtol=1e-3, atol=1e-3)
+
+
+@hypothesis.given(st.integers(0, 10_000), st.floats(0.01, 0.3))
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_unbiasedness(seed, drop):
+    """E[decode(masked encode)] == x over mask draws."""
+    n = 3000
+    x = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    code = coding.plan(n)
+    signs = coding.rademacher(jax.random.PRNGKey(7), code)
+    wire = coding.encode(x, signs, code)
+    ests = []
+    for i in range(48):
+        m = (jax.random.uniform(jax.random.PRNGKey(seed * 100 + i),
+                                (code.n_rot,)) >= drop)
+        ests.append(np.asarray(coding.decode(
+            wire * m[:, None], m.astype(jnp.float32), signs, code)))
+    bias = np.mean(ests, 0) - np.asarray(x)
+    # bias -> 0 as 1/sqrt(#draws); allow 5 sigma of the estimator std
+    std = np.std(ests, 0) / np.sqrt(len(ests))
+    assert np.mean(np.abs(bias) <= 5 * std + 1e-3) > 0.97
+
+
+def test_error_scales_with_loss():
+    n = 8192
+    x = jax.random.normal(jax.random.PRNGKey(3), (n,))
+    code = coding.plan(n)
+    signs = coding.rademacher(jax.random.PRNGKey(4), code)
+    wire = coding.encode(x, signs, code)
+    errs = []
+    for drop in (0.01, 0.05, 0.2):
+        m = (jax.random.uniform(jax.random.PRNGKey(5), (code.n_rot,)) >= drop)
+        xh = coding.decode(wire * m[:, None], m.astype(jnp.float32),
+                           signs, code)
+        errs.append(float(jnp.linalg.norm(xh - x) / jnp.linalg.norm(x)))
+    assert errs[0] < errs[1] < errs[2]
+    assert errs[0] < 0.15
+
+
+def test_energy_spreading():
+    """A spiky vector's loss error is spread, not concentrated: after
+    losing 10% of wire rows no single coordinate keeps a huge error."""
+    n = 4096
+    x = jnp.zeros((n,)).at[7].set(100.0)          # all energy in one coord
+    code = coding.plan(n)
+    signs = coding.rademacher(jax.random.PRNGKey(8), code)
+    wire = coding.encode(x, signs, code)
+    m = (jax.random.uniform(jax.random.PRNGKey(9), (code.n_rot,)) >= 0.1)
+    xh = coding.decode(wire * m[:, None], m.astype(jnp.float32), signs, code)
+    err = np.abs(np.asarray(xh - x))
+    assert err[7] < 25.0                          # spike mostly recovered
+    assert np.max(np.delete(err, 7)) < 25.0       # no other spike appears
+
+
+@hypothesis.given(st.integers(2, 16), st.integers(0, 100))
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_xor_single_loss_exact(g, seed):
+    chunks = jax.random.normal(jax.random.PRNGKey(seed), (g, 32))
+    parity = coding.xor_parity_encode(chunks)
+    lost = seed % g
+    arrived = jnp.ones((g,), bool).at[lost].set(False)
+    rec = coding.xor_parity_decode(chunks * arrived[:, None], parity, arrived)
+    np.testing.assert_array_equal(np.asarray(rec), np.asarray(chunks))
+
+
+def test_xor_double_loss_falls_back_to_zero():
+    chunks = jax.random.normal(jax.random.PRNGKey(1), (6, 16))
+    parity = coding.xor_parity_encode(chunks)
+    arrived = jnp.ones((6,), bool).at[1].set(False).at[4].set(False)
+    rec = coding.xor_parity_decode(chunks * arrived[:, None], parity, arrived)
+    assert np.all(np.asarray(rec[1]) == 0) and np.all(np.asarray(rec[4]) == 0)
+    np.testing.assert_array_equal(np.asarray(rec[0]), np.asarray(chunks[0]))

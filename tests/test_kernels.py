@@ -1,0 +1,85 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES = [(8, 128), (3, 256), (100, 4096), (1, 2), (16, 1024), (257, 512)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("rows,n", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fwht_matches_oracle(rows, n, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(rows * n), (rows, n), dtype)
+    got = ops.fwht(x)
+    want = ref.fwht(x)
+    tol = 1e-4 if dtype == jnp.float32 else 8e-2 * np.sqrt(n)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_fwht_matches_hadamard_matmul():
+    n = 256
+    x = jax.random.normal(jax.random.PRNGKey(0), (5, n))
+    h = ref.hadamard_matrix(n)
+    np.testing.assert_allclose(np.asarray(ops.fwht(x)), np.asarray(x @ h),
+                               rtol=1e-4, atol=1e-3)
+
+
+@hypothesis.given(st.integers(1, 40), st.integers(1, 9))
+@hypothesis.settings(max_examples=12, deadline=None)
+def test_fwht_involution(rows, log_n):
+    """H(H(x)) = n * x  (Hadamard is an involution up to scale)."""
+    n = 1 << log_n
+    x = jax.random.normal(jax.random.PRNGKey(rows + log_n), (rows, n))
+    y = ops.fwht(ops.fwht(x)) / n
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x),
+                               rtol=2e-4, atol=2e-4)
+
+
+@hypothesis.given(st.integers(1, 6))
+@hypothesis.settings(max_examples=6, deadline=None)
+def test_fwht_orthogonality(log_n):
+    """Parseval: ||Hx||^2 = n ||x||^2."""
+    n = 1 << log_n
+    x = jax.random.normal(jax.random.PRNGKey(log_n), (4, n))
+    lhs = jnp.sum(jnp.square(ops.fwht(x)), -1)
+    rhs = n * jnp.sum(jnp.square(x), -1)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-4)
+
+
+@pytest.mark.parametrize("rows,n", [(8, 128), (64, 512), (3, 64)])
+def test_quantize_matches_oracle(rows, n):
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (rows, n)) * 3
+    noise = jax.random.uniform(jax.random.fold_in(key, 1), (rows, n))
+    q1, s1 = ops.quantize_int8(x, noise)
+    q2, s2 = ref.quantize_int8(x, noise)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+
+
+def test_quantize_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(2), (16, 256))
+    noise = jax.random.uniform(jax.random.PRNGKey(3), (16, 256))
+    q, s = ops.quantize_int8(x, noise)
+    err = jnp.abs(ops.dequantize_int8(q, s) - x)
+    # absmax/127 quantum bound per row
+    bound = (jnp.max(jnp.abs(x), -1) / 127.0 * 1.001)[:, None]
+    assert bool(jnp.all(err <= bound + 1e-6))
+
+
+@pytest.mark.parametrize("rows,n", [(8, 128), (32, 64)])
+def test_masked_unbias_matches_oracle(rows, n):
+    y = jax.random.normal(jax.random.PRNGKey(4), (rows, n))
+    c = jax.random.randint(jax.random.PRNGKey(5), (rows,), 0, 5).astype(
+        jnp.float32)
+    got = ops.masked_unbias(y, c, total=4)
+    want = ref.masked_unbias(y, c, 4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)

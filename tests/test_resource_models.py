@@ -1,0 +1,73 @@
+"""Table I / Table II reproduction: QP state, BRAM, MTBF."""
+import pytest
+
+from repro.core import qp_state, resource_model as rm
+
+
+def test_qp_bytes_match_paper_table1():
+    for d, want in qp_state.PAPER_QP_BYTES.items():
+        assert qp_state.qp_bytes(d) == want, d
+
+
+def test_celeris_base_context_is_20_bytes():
+    base = [f for f in qp_state.celeris_context() if f.category != "cc"]
+    assert sum(f.bytes for f in base) == 20
+
+
+def test_celeris_has_no_reliability_state():
+    assert qp_state.reliability_state_bytes("celeris") == 0
+    for d in ("roce", "irn", "srnic"):
+        assert qp_state.reliability_state_bytes(d) > 0
+
+
+def test_qp_scalability_ordering():
+    caps = {d: qp_state.qp_capacity(d) for d in qp_state.DESIGNS}
+    assert caps["celeris"] > caps["srnic"] > caps["roce"] > caps["irn"]
+    # paper: Celeris supports ~8x the QPs of RoCE (80K vs 10K)
+    assert caps["celeris"] / caps["roce"] == pytest.approx(
+        qp_state.PAPER_QP_SCALABILITY["celeris"]
+        / qp_state.PAPER_QP_SCALABILITY["roce"], rel=0.05)
+
+
+def test_bram_matches_paper_table2():
+    for d, want in rm.PAPER_BRAM.items():
+        assert rm.bram_blocks(d) == pytest.approx(want, rel=1e-3), d
+
+
+def test_bram_celeris_reduction_63_to_73_percent():
+    c = rm.bram_blocks("celeris")
+    assert 0.60 < 1 - c / rm.bram_blocks("roce") < 0.68    # paper: 63.5%
+    assert 0.70 < 1 - c / rm.bram_blocks("irn") < 0.75     # paper: 72.7%
+
+
+def test_mtbf_predictions_within_2pct_of_paper():
+    """Calibrated on RoCE only; IRN/SRNIC/Celeris are predictions."""
+    for d, want in rm.PAPER_MTBF_HRS.items():
+        got = rm.cluster_mtbf_hours(d)
+        assert abs(got - want) / want < 0.02, (d, got, want)
+
+
+def test_mtbf_doubles_roce_to_celeris():
+    ratio = rm.cluster_mtbf_hours("celeris") / rm.cluster_mtbf_hours("roce")
+    assert 1.8 < ratio < 2.0                               # paper: ~1.9x
+
+
+def test_mtbf_scales_inverse_with_nodes():
+    a = rm.cluster_mtbf_hours("celeris", n_nodes=1000)
+    b = rm.cluster_mtbf_hours("celeris", n_nodes=10_000)
+    assert a / b == pytest.approx(10.0)
+
+
+def test_asic_area_ordering():
+    """Paper: Celeris ~57% less silicon than IRN, ~28% less than SRNIC."""
+    c = rm.asic_area_au("celeris")
+    assert 0.45 < 1 - c / rm.asic_area_au("irn") < 0.65
+    assert 0.18 < 1 - c / rm.asic_area_au("srnic") < 0.38
+
+
+def test_bram_scales_with_qp_count():
+    assert rm.bram_blocks("celeris", 80_000) < rm.bram_blocks("roce", 80_000)
+    # at equal SRAM-feasible QP counts the gap widens with scale
+    gap10k = rm.bram_blocks("roce", 10_000) - rm.bram_blocks("celeris", 10_000)
+    gap40k = rm.bram_blocks("roce", 40_000) - rm.bram_blocks("celeris", 40_000)
+    assert gap40k > 3 * gap10k

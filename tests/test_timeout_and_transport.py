@@ -1,0 +1,117 @@
+"""Timeout controller + transport simulator behavior (paper §III-B, §IV)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import timeout as tmod
+from repro.core.transport import (CollectiveSimulator, SimParams,
+                                  NetworkParams)
+from repro.core.transport.network import ClosFabric
+from repro.core.transport import dcqcn
+from repro.core.transport.params import DcqcnParams
+
+
+# ---------------------------------------------------------------- timeout
+
+@hypothesis.given(st.floats(1e-3, 5.0), st.floats(0.01, 1.0))
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_timeout_always_in_bounds(duration, frac):
+    cfg = tmod.TimeoutConfig()
+    c = tmod.TimeoutController(cfg)
+    for _ in range(5):
+        to = c.update(duration, frac)
+        assert cfg.min_timeout <= to <= cfg.max_timeout
+
+
+def test_timeout_tracks_full_delivery():
+    c = tmod.TimeoutController(tmod.TimeoutConfig(init_timeout=1.0))
+    for _ in range(200):
+        c.update(0.2, 1.0)
+    assert abs(c.timeout - 0.2) < 0.01      # converges to observed duration
+
+
+def test_timeout_grows_under_partial_delivery():
+    cfg = tmod.TimeoutConfig(init_timeout=0.1, max_timeout=10.0)
+    c = tmod.TimeoutController(cfg)
+    before = c.timeout
+    for _ in range(50):
+        c.update(0.1, 0.5)                  # only half the data arrives
+    assert c.timeout > before * 1.5         # extrapolates toward full
+
+
+def test_jax_controller_matches_host():
+    cfg = tmod.TimeoutConfig()
+    host = tmod.TimeoutController(cfg)
+    state = tmod.init_jax(cfg)
+    for i, (d, f) in enumerate([(0.3, 1.0), (0.5, 0.8), (0.2, 0.99),
+                                (1.0, 0.4)]):
+        host.update(d, f)
+        state = tmod.update_jax(state, jnp.float32(d), jnp.float32(f), cfg)
+        np.testing.assert_allclose(float(state[0]), host.timeout, rtol=1e-5)
+
+
+def test_median_coordination_robust_to_stragglers():
+    tos = [0.1] * 9 + [50.0]                # one node went crazy
+    assert tmod.coordinate(tos) == pytest.approx(0.1)
+
+
+# -------------------------------------------------------------- transport
+
+@pytest.fixture(scope="module")
+def small_sim():
+    # 32-node downscale: raise the per-ToR burst rate so bursts/round
+    # match the 128-node default (fewer ToRs x fewer ring steps)
+    return CollectiveSimulator(SimParams(net=NetworkParams(
+        n_nodes=32, burst_on_prob=0.0008)))
+
+
+def test_fig2_tail_reduction(small_sim):
+    """Core paper claim at reduced scale: Celeris cuts p99 >= 1.5x with
+    <2% loss and preserved median."""
+    stats = small_sim.paper_protocol(n_rounds=150, seed=0)
+    roce, cel = stats["roce"], stats["celeris"]
+    assert roce.p99 / roce.p50 > 2.0        # baseline has a real tail
+    assert roce.p99 / cel.p99 > 1.5         # Celeris cuts it
+    # <1% loss is a 128-node property (benchmarks/fig2); at 32 nodes
+    # the same burst duration covers a larger round fraction -> more loss
+    assert cel.mean_loss < 0.06
+    assert 0.9 < cel.p50 / roce.p50 < 1.1   # median preserved
+
+
+def test_reliable_designs_lose_nothing(small_sim):
+    for d in ("roce", "irn", "srnic"):
+        st_ = small_sim.run(d, 30, seed=1)
+        assert st_.mean_loss == 0.0
+
+
+def test_celeris_step_window_flattens_tail(small_sim):
+    base = small_sim.run("roce", 120, seed=2)
+    cel = small_sim.run("celeris", 120, adaptive=True, window="step", seed=2)
+    assert cel.p99 / cel.p50 < base.p99 / base.p50
+    assert cel.mean_loss < 0.01
+
+
+def test_fabric_occupancy_bounded():
+    net = NetworkParams(n_nodes=32)
+    fab = ClosFabric(net, seed=0)
+    for _ in range(500):
+        fab.advance()
+        assert np.all(fab.state.occupancy >= 0)
+        assert np.all(fab.state.occupancy <= 1.0)
+
+
+def test_dcqcn_rate_dynamics():
+    p = DcqcnParams()
+    st_ = dcqcn.DcqcnState.init(8)
+    # sustained congestion cuts rates
+    for _ in range(20):
+        st_ = dcqcn.step(st_, np.ones(8, bool), p)
+    assert np.all(st_.rate < 1.0)
+    low = st_.rate.copy()
+    # calm period recovers
+    for _ in range(100):
+        st_ = dcqcn.step(st_, np.zeros(8, bool), p)
+    assert np.all(st_.rate > low)
+    assert np.all(st_.rate <= 1.0)
