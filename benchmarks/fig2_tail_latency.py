@@ -2,16 +2,22 @@
 
 Paper protocol: RoCE baseline; Celeris window fixed at baseline
 median + 1 sigma; report p50/p99 per design + data loss.  Also runs the
-beyond-paper adaptive per-step window.
+beyond-paper adaptive per-step window, and (unless ``--quick``) times
+the retained sequential reference loop against the batched engine to
+report the speedup measured on this machine.
 """
+import time
+
 import numpy as np
 
 from repro.core.transport import CollectiveSimulator, SimParams
 
 
-def run(n_rounds=300, seed=0):
+def run(n_rounds=300, seed=0, bench_sequential=True):
     sim = CollectiveSimulator(SimParams())
+    t0 = time.perf_counter()
     stats = sim.paper_protocol(n_rounds=n_rounds, seed=seed)
+    engine_wall = time.perf_counter() - t0
     rows = []
     print("\n== Fig. 2: AllReduce step time under contention (128 nodes) ==")
     print(f"{'design':10s} {'p50 ms':>8s} {'p99 ms':>8s} {'p99/p50':>8s} "
@@ -33,4 +39,25 @@ def run(n_rounds=300, seed=0):
     print(f"beyond-paper adaptive step-window: p99 {cel2.p99/1e3:.2f} ms, "
           f"loss {cel2.mean_loss*100:.2f}%, reduction {red2:.2f}x")
     rows.append(("fig2_beyond_step_window_reduction", round(red2, 2), None))
+
+    rows.append(("fig2_engine_wall_s", round(engine_wall, 2), None))
+    print(f"batched engine wall-clock ({n_rounds} rounds, 4-design "
+          f"paper protocol): {engine_wall:.2f}s")
+    if bench_sequential:
+        from repro.core.transport.reference import (
+            SequentialCollectiveSimulator)
+        seq = SequentialCollectiveSimulator(SimParams())
+        t0 = time.perf_counter()
+        base = seq.run("roce", n_rounds, seed=seed)
+        to = float(np.percentile(base.times_us, 50) + base.times_us.std())
+        for d in ("irn", "srnic"):
+            seq.run(d, n_rounds, seed=seed)
+        seq.run("celeris", n_rounds, celeris_timeout_us=to,
+                adaptive=False, window="round", seed=seed)
+        seq_wall = time.perf_counter() - t0
+        speedup = seq_wall / engine_wall
+        print(f"sequential reference wall-clock: {seq_wall:.2f}s "
+              f"-> speedup {speedup:.1f}x")
+        rows.append(("fig2_sequential_wall_s", round(seq_wall, 2), None))
+        rows.append(("fig2_engine_speedup_x", round(speedup, 1), 10.0))
     return rows

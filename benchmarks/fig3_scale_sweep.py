@@ -1,0 +1,53 @@
+"""Fig. 3 (beyond-paper): p99 AllReduce time vs cluster size, 128-1024
+nodes, multi-seed confidence intervals.
+
+The tail-at-scale effect the paper argues about compounds with N (a
+ring round is 2(N-1) synchronized steps, each gated by the slowest of N
+flows), so the p99/p50 separation between RoCE and Celeris should widen
+with cluster size.  The pre-refactor per-step simulator could not reach
+these scales; the batched engine sweeps them in shared-fabric mode (one
+contention trace and one DCQCN trace per seed, every design riding it).
+"""
+import time
+
+from repro.core.transport import BatchedSimParams, sweep
+
+
+def run(n_rounds=120, seeds=(0, 1, 2, 3), n_nodes=(128, 256, 512, 1024),
+        message_mb=25.0):
+    t0 = time.perf_counter()
+    res = sweep(BatchedSimParams(
+        n_nodes=tuple(n_nodes), message_mb=(message_mb,),
+        seeds=tuple(seeds), n_rounds=n_rounds),
+        progress=lambda msg: print(f"  [fig3] {msg}", flush=True))
+    wall = time.perf_counter() - t0
+
+    rows = []
+    print(f"\n== Fig. 3: p99 vs cluster size ({len(seeds)} seeds, "
+          f"{n_rounds} rounds, {message_mb:.0f} MB) ==")
+    header = "nodes " + "".join(f"{d:>16s}" for d in res.params.designs)
+    print(header + "      (p99 ms, mean +/- std over seeds)")
+    for nn in n_nodes:
+        cells = []
+        for d in res.params.designs:
+            mean, std = res.p99_vs_scale(d, message_mb)[nn]
+            cells.append(f"{mean / 1e3:9.2f}+-{std / 1e3:5.2f}")
+        print(f"{nn:5d} " + "".join(f"{c:>16s}" for c in cells))
+    for d in res.params.designs:
+        curve = res.p99_vs_scale(d, message_mb)
+        for nn in n_nodes:
+            rows.append((f"fig3_p99_ms_{d}_n{nn}",
+                         round(curve[nn][0] / 1e3, 2), None))
+    # the headline: does the RoCE->Celeris reduction grow with scale?
+    for nn in (n_nodes[0], n_nodes[-1]):
+        red = (res.p99_vs_scale("roce", message_mb)[nn][0]
+               / res.p99_vs_scale("celeris", message_mb)[nn][0])
+        rows.append((f"fig3_p99_reduction_n{nn}", round(red, 2), None))
+        print(f"p99 reduction RoCE->Celeris at {nn} nodes: {red:.2f}x")
+    rows.append(("fig3_wall_s", round(wall, 1), None))
+    print(f"sweep wall-clock: {wall:.1f}s")
+    return rows, res
+
+
+if __name__ == "__main__":
+    run()

@@ -13,8 +13,8 @@ from repro.kernels import ops, ref
 
 
 def _time(f, *args, n=3):
-    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
-        jax.block_until_ready(f(*args))
+    out = f(*args)                       # one warmup: compile + execute
+    jax.block_until_ready(out)           # handles tuples/pytrees too
     t0 = time.perf_counter()
     for _ in range(n):
         jax.block_until_ready(f(*args))
@@ -24,14 +24,33 @@ def _time(f, *args, n=3):
 def run():
     rows = []
     print("\n== kernels: us/call (CPU; pallas in interpret mode) ==")
-    x = jax.random.normal(jax.random.PRNGKey(0), (256, 4096))
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (256, 4096))
+    signs = jax.random.rademacher(jax.random.PRNGKey(7), (4096,),
+                                  dtype=jnp.float32)
+
     jit_ref = jax.jit(ref.fwht)
     us_ref = _time(jit_ref, x)
-    print(f"fwht jnp-oracle  (256,4096): {us_ref:10.1f} us")
+    print(f"fwht jnp-oracle    (256,4096): {us_ref:10.1f} us")
     rows.append(("kernel_fwht_ref_us", round(us_ref, 1), None))
+
+    us_pal = _time(lambda a: ops.fwht(a), x)
+    print(f"fwht pallas        (256,4096): {us_pal:10.1f} us")
+    rows.append(("kernel_fwht_pallas_us", round(us_pal, 1), None))
+
+    # fused sign-multiply + scale (what coding.encode issues)
+    us_fused = _time(lambda a, s: ops.fwht(a, signs=s, scale=4096 ** -0.5),
+                     x, signs)
+    print(f"fwht pallas fused  (256,4096): {us_fused:10.1f} us")
+    rows.append(("kernel_fwht_pallas_fused_us", round(us_fused, 1), None))
+
     noise = jax.random.uniform(jax.random.PRNGKey(1), (256, 4096))
     jit_q = jax.jit(lambda a, b: ref.quantize_int8(a, b))
     us_q = _time(jit_q, x, noise)
-    print(f"quantize jnp     (256,4096): {us_q:10.1f} us")
+    print(f"quantize jnp       (256,4096): {us_q:10.1f} us")
     rows.append(("kernel_quant_ref_us", round(us_q, 1), None))
+
+    us_qp = _time(lambda a, b: ops.quantize_int8(a, b), x, noise)
+    print(f"quantize pallas    (256,4096): {us_qp:10.1f} us")
+    rows.append(("kernel_quant_pallas_us", round(us_qp, 1), None))
     return rows

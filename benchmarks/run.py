@@ -1,19 +1,35 @@
 """Benchmark driver: one function per paper table/figure.
 
-Prints ``name,value,paper_reference`` CSV at the end.
+Prints ``name,value,paper_reference`` CSV at the end and writes
+``BENCH_sim.json`` (machine-readable transport-simulation metrics:
+wall-clocks, speedup vs the sequential reference, p99s per design and
+scale) next to the repo root for CI consumption.
+
+``--quick`` shrinks rounds/steps and skips the sequential-reference
+timing and the 512/1024-node sweep tiers.
 """
+import json
+import os
 import sys
+import time
 
 
 def main() -> None:
     from benchmarks import (table1_qp_state, table2_resources,
                             fig2_tail_latency, fig1_loss_tolerance,
-                            kernel_bench, roofline)
+                            fig3_scale_sweep, kernel_bench, roofline)
     quick = "--quick" in sys.argv
+    t_start = time.perf_counter()
     rows = []
     rows += table1_qp_state.run()
     rows += table2_resources.run()
-    rows += fig2_tail_latency.run(n_rounds=120 if quick else 300)
+    rows += fig2_tail_latency.run(n_rounds=120 if quick else 300,
+                                  bench_sequential=not quick)
+    fig3_rows, _ = fig3_scale_sweep.run(
+        n_rounds=60 if quick else 120,
+        seeds=(0, 1) if quick else (0, 1, 2, 3),
+        n_nodes=(128, 256) if quick else (128, 256, 512, 1024))
+    rows += fig3_rows
     rows += fig1_loss_tolerance.run(steps=25 if quick else 60)
     rows += kernel_bench.run()
     rows += roofline.run()
@@ -21,6 +37,16 @@ def main() -> None:
     print("\nname,value,paper_reference")
     for name, val, ref in rows:
         print(f"{name},{val},{'' if ref is None else ref}")
+
+    bench = {name: val for name, val, _ in rows
+             if name.startswith(("fig2_", "fig3_", "kernel_"))}
+    bench["total_bench_wall_s"] = round(time.perf_counter() - t_start, 1)
+    bench["quick"] = quick
+    out_path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_sim.json")
+    with open(out_path, "w") as f:
+        json.dump(bench, f, indent=1, sort_keys=True)
+    print(f"\nwrote {out_path}")
 
 
 if __name__ == "__main__":

@@ -2,12 +2,14 @@
 
     PYTHONPATH=src python examples/transport_study.py --rounds 300
     PYTHONPATH=src python examples/transport_study.py --sweep-timeout
+    PYTHONPATH=src python examples/transport_study.py --scale-sweep
 """
 import argparse
 
 import numpy as np
 
-from repro.core.transport import CollectiveSimulator, SimParams
+from repro.core.transport import (BatchedSimParams, CollectiveSimulator,
+                                  SimParams, sweep)
 
 
 def main():
@@ -16,9 +18,25 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--sweep-timeout", action="store_true",
                     help="sweep the bounded-window size: tail vs loss")
+    ap.add_argument("--scale-sweep", action="store_true",
+                    help="batched-engine sweep: p99 vs cluster size and "
+                         "message size")
     args = ap.parse_args()
 
     sim = CollectiveSimulator(SimParams())
+
+    if args.scale_sweep:
+        res = sweep(BatchedSimParams(
+            n_nodes=(128, 256, 512), message_mb=(8.0, 25.0),
+            seeds=(args.seed, args.seed + 1), n_rounds=args.rounds))
+        print(f"{'design':10s} {'nodes':>6s} {'MB':>5s} "
+              f"{'p99 ms (mean+-sd)':>18s}")
+        for d in res.params.designs:
+            for mb in res.params.message_mb:
+                for nn, (mean, sd) in res.p99_vs_scale(d, mb).items():
+                    print(f"{d:10s} {nn:6d} {mb:5.0f} "
+                          f"{mean/1e3:10.2f}+-{sd/1e3:5.2f}")
+        return
 
     if args.sweep_timeout:
         base = sim.run("roce", args.rounds, seed=args.seed)

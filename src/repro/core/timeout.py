@@ -90,6 +90,31 @@ def coordinate(local_timeouts: Sequence[float]) -> float:
 
 
 # ----------------------------------------------------------------------
+# Vectorized (whole-cluster) forms used by the batched transport engine:
+# one (n_nodes,) array replaces n TimeoutController objects.  Semantics
+# match the host controller per node exactly; the property test pins it.
+# ----------------------------------------------------------------------
+
+def update_array(smoothed: np.ndarray, duration: float,
+                 received_fraction: np.ndarray, cfg: TimeoutConfig
+                 ) -> tuple[np.ndarray, np.ndarray]:
+    """Per-node :meth:`TimeoutController.update` over an (n,) state array.
+
+    Returns (local_timeouts, new_smoothed) — the local timeouts are what
+    each node would report for coordination.
+    """
+    frac = np.maximum(received_fraction, cfg.eps)
+    tgt = np.where(frac >= 1.0, duration, duration / frac * cfg.margin)
+    sm = (1.0 - cfg.alpha) * smoothed + cfg.alpha * tgt
+    return np.clip(sm, cfg.min_timeout, cfg.max_timeout), sm
+
+
+def adopt_scalar(cluster_timeout: float, cfg: TimeoutConfig) -> float:
+    """:meth:`TimeoutController.adopt` for the coordinated median."""
+    return float(np.clip(cluster_timeout, cfg.min_timeout, cfg.max_timeout))
+
+
+# ----------------------------------------------------------------------
 # In-graph (jnp) versions — state is a (timeout, smoothed_target) pair of
 # scalars; semantics match the host implementation bit-for-bit in f64.
 # ----------------------------------------------------------------------

@@ -1,9 +1,12 @@
 from repro.core.transport.params import (
     SimParams, NetworkParams, DcqcnParams, ReliabilityParams, WorkloadParams)
-from repro.core.transport.simulator import CollectiveSimulator, RoundStats
+from repro.core.transport.engine import (
+    BatchedEngine, BatchedSimParams, RoundStats, SweepResult, sweep)
+from repro.core.transport.simulator import CollectiveSimulator
 from repro.core.transport.designs import DESIGNS
 
 __all__ = [
     "SimParams", "NetworkParams", "DcqcnParams", "ReliabilityParams",
     "WorkloadParams", "CollectiveSimulator", "RoundStats", "DESIGNS",
+    "BatchedEngine", "BatchedSimParams", "SweepResult", "sweep",
 ]

@@ -17,15 +17,15 @@ from repro.core.transport.params import DcqcnParams
 
 @dataclasses.dataclass
 class DcqcnState:
-    rate: np.ndarray          # (n_flows,) fraction of line rate
+    rate: np.ndarray          # (..., n_flows) fraction of line rate
     target: np.ndarray
     alpha: np.ndarray
     good_stages: np.ndarray   # consecutive no-CNP stages
 
     @classmethod
-    def init(cls, n_flows: int) -> "DcqcnState":
-        return cls(rate=np.ones(n_flows), target=np.ones(n_flows),
-                   alpha=np.ones(n_flows), good_stages=np.zeros(n_flows, int))
+    def init(cls, shape: int | tuple) -> "DcqcnState":
+        return cls(rate=np.ones(shape), target=np.ones(shape),
+                   alpha=np.ones(shape), good_stages=np.zeros(shape, int))
 
 
 def step(state: DcqcnState, cnp_received: np.ndarray, p: DcqcnParams) -> DcqcnState:
@@ -46,3 +46,94 @@ def step(state: DcqcnState, cnp_received: np.ndarray, p: DcqcnParams) -> DcqcnSt
     rate = np.clip(np.where(cnp_received, r_cut, r_up), p.min_rate, 1.0)
     return DcqcnState(rate=rate, target=np.clip(t_new, p.min_rate, 1.0),
                       alpha=a_new, good_stages=g_new)
+
+
+# ----------------------------------------------------------------------
+# Whole-trace evaluation (the batched engine's congestion-control pass)
+# ----------------------------------------------------------------------
+#
+# DCQCN is the one true *per-step* sequential dependency in the
+# transport model.  But the recurrence is only data-dependent at steps
+# where some flow receives a CNP; between CNPs the update is the
+# deterministic recovery ramp, which has a closed form:
+#
+#   - alpha decays geometrically:  a_L = (1-g)^L * a_0
+#   - good_stages counts up:       g_L = g_0 + L
+#   - rate ramps additively toward ``target`` for the first
+#     k = clip(hyper_after - g_0, 0, L) steps, then hyper-increases
+#     toward 1.0 (the two phases are each elementwise-monotone
+#     saturating ramps, so min()s give the exact per-step value).
+#
+# ``rate_trace`` therefore touches Python only at CNP steps (a few
+# percent of steps under the paper's burst process) and fills the calm
+# gaps in closed form — exactly matching the step()-by-step recurrence.
+
+
+def _calm_rates(state: DcqcnState, i: np.ndarray, p: DcqcnParams,
+                dtype=np.float64) -> np.ndarray:
+    """Rate after ``i`` consecutive no-CNP updates of ``state`` (exact).
+
+    ``i``: integer array broadcastable against ``state.rate`` with a
+    leading axis (one entry per gap position); ``i == 0`` returns the
+    current rate.  ``dtype`` controls only the *emitted* ramp values
+    (the engine fills float32 traces); state math stays float64.
+    """
+    r = state.rate.astype(dtype, copy=False)
+    t = state.target.astype(dtype, copy=False)
+    g = state.good_stages.astype(np.int32, copy=False)
+    k = np.clip(np.int32(p.hyper_after) - g, 0, i)  # additive steps among i
+    kf = k.astype(dtype)
+    # invariant: k > 0 implies r <= t (hyper is the only way past target,
+    # and it requires good_stages > hyper_after, i.e. k == 0)
+    r_add = np.where(k > 0,
+                     np.minimum(t, r + dtype(p.additive_increase) * kf), r)
+    r_i = np.where(i > k,
+                   np.minimum(dtype(1.0),
+                              r_add + dtype(p.hyper_increase)
+                              * (i - k).astype(dtype)),
+                   r_add)
+    # no clip needed: both ramps start at r >= min_rate and saturate at
+    # min(target, 1) / 1.0, matching step()'s clip exactly
+    return r_i
+
+
+def _advance_calm(state: DcqcnState, L: int, p: DcqcnParams) -> DcqcnState:
+    """State after ``L`` consecutive no-CNP updates (exact, O(1) in L)."""
+    return DcqcnState(
+        rate=_calm_rates(state, np.asarray(L), p),
+        target=state.target,
+        alpha=state.alpha * (1.0 - p.alpha_g) ** L,
+        good_stages=state.good_stages + L)
+
+
+def rate_trace(cnp: np.ndarray, p: DcqcnParams, state: DcqcnState | None = None,
+               dtype=np.float64) -> tuple[np.ndarray, DcqcnState]:
+    """Sending rate *used at* each step for a whole CNP trace.
+
+    ``cnp``: (T, ..., n_flows) bool.  Returns (rates (T, ..., n_flows),
+    final_state) where ``rates[t]`` is the state rate before step t's
+    update — the rate the transfer at step t sees, matching the
+    sequential  ``use rate; draw cnp; step()``  order of the original
+    simulator loop.  State evolution is float64 regardless of ``dtype``
+    (which only sets the emitted trace precision).
+    """
+    T = cnp.shape[0]
+    if state is None:
+        state = DcqcnState.init(cnp.shape[1:])
+    out = np.empty(cnp.shape, dtype=dtype)
+    active = np.flatnonzero(cnp.reshape(T, -1).any(axis=1))
+    expand = (slice(None),) + (None,) * state.rate.ndim
+    prev = 0
+    for a in active:
+        if a > prev:
+            gap = np.arange(a - prev, dtype=np.int32)[expand]
+            out[prev:a] = _calm_rates(state, gap, p, dtype)
+            state = _advance_calm(state, a - prev, p)
+        out[a] = state.rate
+        state = step(state, cnp[a], p)
+        prev = a + 1
+    if prev < T:
+        gap = np.arange(T - prev, dtype=np.int32)[expand]
+        out[prev:T] = _calm_rates(state, gap, p, dtype)
+        state = _advance_calm(state, T - prev, p)
+    return out, state

@@ -1,0 +1,645 @@
+"""Batched, vectorized transport-simulation engine.
+
+The original :class:`~repro.core.transport.simulator.CollectiveSimulator`
+walked a pure-Python ``rounds x 2(N-1)`` double loop, issuing dozens of
+small per-node numpy calls per ring step — a 128-node/300-round Fig.-2
+protocol took >70 s, and the scales where tail-at-scale effects actually
+bite (512-1024 nodes, multi-seed sweeps) were unaffordable.  This module
+replaces the loop with whole-trace tensor operations.
+
+Data layout
+-----------
+The engine materializes the simulation as ``(step, node)`` blocks —
+``step`` is the flattened ``round * ring_step`` time axis (rounds are
+contiguous runs of ``2(N-1)`` steps), ``node`` the concurrent ring
+flows.  Work proceeds in *round blocks* (a bounded number of rounds per
+chunk, sized to a fixed element budget) so peak memory stays flat at any
+cluster size; every per-(step, node) quantity — path occupancy, drop /
+ECN / queue curves, DCQCN send rate, per-design transfer times and
+delivered packets — is computed for the whole block at once.  Designs
+and seeds batch naturally: all NIC designs of one seed share the same
+fabric contention trace and DCQCN rate trace, and sweeps loop seeds ×
+(cluster size, message size) configurations around the same core.
+
+What stays sequential, and why
+------------------------------
+Only true control dependencies remain step-by-step; everything else is
+closed-form or embarrassingly parallel over the trace:
+
+- **Background burst Markov chain** (per ToR): resolved in closed form
+  (last-constant-map + swap-parity composition) — bit-identical to
+  sequential ``advance()`` calls on the same stream
+  (:func:`repro.core.transport.network.occupancy_trace`).
+- **Occupancy EWMA**: a truncated geometric filter (error 0.5**64,
+  below f64 resolution).
+- **DCQCN** is genuinely sequential *across steps* (each step's rate
+  depends on the previous state), but the recurrence is only
+  data-dependent at CNP steps; calm gaps advance in closed form
+  (:func:`repro.core.transport.dcqcn.rate_trace`), so Python touches a
+  few percent of steps.
+- **Adaptive bounded-window coordination** is genuinely sequential
+  *across rounds* (the cluster adopts the median timeout each round),
+  but it never feeds back into the physics — transfer times don't
+  depend on the window — so it runs as a cheap per-round assembly pass
+  over precomputed step traces, vectorized over nodes.
+- **RoCE's PFC-cascade draws** pollute the fabric random stream with a
+  data-dependent number of draws per step.  ``legacy_streams=True``
+  (the compatibility default) replays that stream bit-exactly via
+  speculative windows (:func:`repro.core.transport.network.
+  roce_fabric_trace`), so seeded pre-refactor statistics are
+  reproduced up to transfer-draw noise (a few percent on p99);
+  ``legacy_streams=False`` (the sweep default) shares one clean fabric
+  trace across all designs.
+
+Entry points
+------------
+- :meth:`BatchedEngine.run` — one design, returns :class:`RoundStats`
+  (what ``CollectiveSimulator.run`` now wraps);
+- :meth:`BatchedEngine.traces` /:meth:`BatchedEngine.assemble` — the
+  two-phase core (all designs share one physics pass; windows applied
+  afterwards);
+- :meth:`BatchedEngine.paper_protocol` — the Fig.-2 protocol;
+- :func:`sweep` + :class:`BatchedSimParams` — multi-(scale, message,
+  seed) sweeps, e.g. ``sweep(BatchedSimParams(n_nodes=(128, 256, 512,
+  1024), seeds=range(4)))``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence
+
+import numpy as np
+
+from repro.core import timeout as timeout_mod
+from repro.core.transport import dcqcn, designs, network, replay
+from repro.core.transport.params import SimParams
+
+# Engine-native random sub-streams, all derived from the user seed.
+# (The per-step simulator interleaved every draw into one stream; the
+# batched engine draws whole traces per purpose, so each purpose gets
+# its own child stream.  irn and srnic intentionally share one: in the
+# sequential simulator both designs consumed identical draw sequences,
+# making srnic exactly irn + host slow-path on the same loss draws.)
+_STREAM_CNP = 101          # clean-trace CNP draws (shared by designs)
+_STREAM_CNP_ROCE = 102     # CNP draws on the RoCE legacy trace
+_STREAM_PFC = 103          # PFC cascade draws (shared-fabric mode only)
+_STREAM_TRANSFER = {"roce": 110, "irn": 111, "srnic": 111, "celeris": 112}
+_STREAM_WINDOW = 120       # bounded-window controller observation noise
+
+# Round-block sizing: bound the (step, node) chunk to this many elements
+# so peak memory is flat in cluster size (~12 live f64 temporaries).
+_BLOCK_ELEMENTS = 4 << 20
+
+
+@dataclasses.dataclass
+class RoundStats:
+    times_us: np.ndarray          # (rounds,)
+    recv_frac: np.ndarray         # (rounds,) delivered fraction of payload
+    design: str
+
+    @property
+    def p50(self) -> float:
+        return float(np.percentile(self.times_us, 50))
+
+    @property
+    def p99(self) -> float:
+        return float(np.percentile(self.times_us, 99))
+
+    @property
+    def p999(self) -> float:
+        return float(np.percentile(self.times_us, 99.9))
+
+    @property
+    def mean_loss(self) -> float:
+        return float(1.0 - self.recv_frac.mean())
+
+    def summary(self) -> Dict[str, float]:
+        return dict(p50_us=self.p50, p99_us=self.p99, p999_us=self.p999,
+                    mean_us=float(self.times_us.mean()),
+                    data_loss=self.mean_loss)
+
+
+@dataclasses.dataclass
+class StepTrace:
+    """Reduced per-step physics for one design (full trace length T).
+
+    ``nat_us``/``deliv``/``total`` are (T,) reductions over nodes; the
+    optional per-node arrays (T, n) are retained only when a per-step
+    bounded window (``window="step"``) must re-inspect individual flows.
+    """
+    design: str
+    steps_per_round: int
+    nat_us: np.ndarray            # max over nodes of completion time
+    deliv: np.ndarray             # delivered packets summed over nodes
+    total: np.ndarray             # offered packets summed over nodes
+    node_time_us: np.ndarray | None = None
+    node_deliv: np.ndarray | None = None
+
+
+class BatchedEngine:
+    """Vectorized collective simulator over ``(step, node)`` tensors."""
+
+    def __init__(self, params: SimParams | None = None):
+        self.p = params or SimParams()
+
+    # ------------------------------------------------------------------
+    def _geometry(self, seed: int):
+        p = self.p
+        net = p.net
+        n = net.n_nodes
+        geo = dict(
+            n=n, steps=2 * (n - 1),
+            n_pkts=max(1, (p.work.message_bytes // n) // net.mtu_bytes),
+            src=np.arange(n), dst=(np.arange(n) + 1) % n,
+            n_tors=n // net.nodes_per_tor)
+        master = np.random.default_rng(seed)
+        geo["fabric_seed"] = int(master.integers(2**31))
+        return geo
+
+    def _new_traces(self, design_list, T, steps, n, per_node_for):
+        out: Dict[str, StepTrace] = {}
+        for d in design_list:
+            keep = d in per_node_for
+            out[d] = StepTrace(
+                design=d, steps_per_round=steps,
+                nat_us=np.empty(T), deliv=np.empty(T), total=np.empty(T),
+                node_time_us=np.empty((T, n)) if keep else None,
+                node_deliv=np.empty((T, n)) if keep else None)
+        return out
+
+    @staticmethod
+    def _reduce_into(tr: StepTrace, sl: slice, time_us, delivered, total):
+        tr.nat_us[sl] = time_us.max(axis=-1)
+        tr.deliv[sl] = delivered.sum(axis=-1)
+        tr.total[sl] = total.sum(axis=-1)
+        if tr.node_time_us is not None:
+            tr.node_time_us[sl] = time_us
+            tr.node_deliv[sl] = delivered
+
+    def traces(self, design_list: Sequence[str], n_rounds: int, seed: int, *,
+               legacy_streams: bool = True,
+               per_node_for: Sequence[str] = (),
+               round_block: int | None = None) -> Dict[str, StepTrace]:
+        """One physics pass for every design in ``design_list``.
+
+        ``legacy_streams=True`` reproduces the sequential simulator's
+        seeded statistics: the fabric trace is replayed bit-exactly per
+        design-stream class (clean for irn/srnic/celeris, PFC-polluted
+        for RoCE), and the irn/srnic/celeris transfer + CNP draws are
+        replayed bit-exactly too (RoCE transfer draws are engine-native
+        — its ``integers`` consumption is irreproducible — leaving a
+        few percent of p99 noise).  Memory is O(T * n); intended for
+        the compatibility scales (<= 256 nodes).
+
+        ``legacy_streams=False`` is the sweep fast path: all designs
+        share one clean fabric trace and one DCQCN rate trace,
+        engine-native streams, processed in bounded round blocks
+        (flat memory at any cluster size).
+        """
+        unknown = [d for d in design_list if d not in designs.DESIGNS]
+        if unknown:
+            raise ValueError(f"unknown design(s) {unknown}; "
+                             f"choose from {designs.DESIGNS}")
+        net = self.p.net
+        if net.n_nodes < net.nodes_per_tor or net.n_nodes % net.nodes_per_tor:
+            raise ValueError(
+                f"n_nodes={net.n_nodes} must be a positive multiple of "
+                f"nodes_per_tor={net.nodes_per_tor}")
+        if net.ecn_threshold > net.loss_knee:
+            # the hot-row prescreen in _sparse_path_curves keys on the
+            # ECN threshold being the lower of the two curves
+            raise ValueError(
+                f"ecn_threshold={net.ecn_threshold} must not exceed "
+                f"loss_knee={net.loss_knee}")
+        if legacy_streams:
+            return self._traces_legacy(design_list, n_rounds, seed,
+                                       per_node_for)
+        return self._traces_shared(design_list, n_rounds, seed,
+                                   per_node_for, round_block)
+
+    # -- legacy mode ---------------------------------------------------
+    def _traces_legacy(self, design_list, n_rounds, seed, per_node_for
+                       ) -> Dict[str, StepTrace]:
+        p = self.p
+        net, rel = p.net, p.rel
+        g = self._geometry(seed)
+        n, steps, n_pkts = g["n"], g["steps"], g["n_pkts"]
+        T = n_rounds * steps
+        src, dst, n_tors = g["src"], g["dst"], g["n_tors"]
+
+        need_clean = any(d != "roce" for d in design_list)
+        if need_clean:
+            # clean fabric trace (shared by irn/srnic/celeris streams)
+            u = np.random.default_rng(g["fabric_seed"]).random(
+                (T, network._ADVANCE_DRAWS, n_tors))
+            state0 = network.FabricState(
+                bursting=np.zeros(n_tors, dtype=bool),
+                occupancy=np.full(n_tors, net.idle_occupancy))
+            _, occ_tor, _ = network.occupancy_trace(net, u, state0)
+            del u
+            ecn_clean, drop_clean, _ = _sparse_path_curves(net, occ_tor,
+                                                           src, dst)
+            occ_clean32 = network.path_occupancy_trace(
+                net, occ_tor.astype(np.float32), src, dst)
+
+        need_roce = "roce" in design_list
+        if need_roce:
+            occ_tor_roce, pfc_roce = network.roce_fabric_trace(
+                net, g["fabric_seed"], src, dst, T)
+            ecn_roce, drop_roce, hot_roce = _sparse_path_curves(
+                net, occ_tor_roce, src, dst)
+            occ_roce32 = network.path_occupancy_trace(
+                net, occ_tor_roce.astype(np.float32), src, dst)
+
+        # replayed draw streams (bit-exact vs the sequential simulator)
+        sr = cel = None
+        if "irn" in design_list or "srnic" in design_list:
+            sr = replay.replay_selective_repeat(seed, n_pkts, drop_clean,
+                                                ecn_clean)
+        if "celeris" in design_list:
+            cel = replay.replay_celeris(seed, n_pkts, drop_clean, ecn_clean)
+
+        # one batched DCQCN pass over all distinct CNP channels
+        channels = []
+        chan_idx = {}
+        if need_roce:
+            # engine-native stream: ECN is zero off the hot rows, so only
+            # those need uniforms
+            cnp_roce = np.zeros((T, n), dtype=bool)
+            cnp_roce[hot_roce] = (
+                np.random.default_rng([seed, _STREAM_CNP_ROCE])
+                .random((hot_roce.size, n)) < ecn_roce[hot_roce])
+            chan_idx["roce"] = len(channels)
+            channels.append(cnp_roce)
+        if sr is not None:
+            chan_idx["sr"] = len(channels)
+            channels.append(sr.cnp)
+        if cel is not None:
+            chan_idx["celeris"] = len(channels)
+            channels.append(cel.cnp)
+        # float32 for the time chain: times feed only max/sum/percentile
+        # reductions, so f32 noise (~1e-7 relative) is immaterial, and
+        # the arrays are memory-bandwidth-bound.  Everything feeding the
+        # *replay* (occupancies, drop/ECN curves) stays f64 — a flipped
+        # comparison there would desynchronize the stream.
+        rates, _ = dcqcn.rate_trace(np.stack(channels, axis=1), p.dcqcn,
+                                    dtype=np.float32)
+
+        out = self._new_traces(design_list, T, steps, n, per_node_for)
+        if need_clean:
+            qd_clean = network.queue_delay_us(net, occ_clean32)
+            avail_clean = network.avail_bandwidth(net, occ_clean32)
+        full_total = np.full(T, float(n_pkts * n))
+
+        if need_roce:
+            rate_d = np.ascontiguousarray(rates[:, chan_idx["roce"]])
+            eff = rate_d * network.avail_bandwidth(net, occ_roce32)
+            res = designs.transfer(
+                "roce", n_pkts, occ_roce32, eff, drop_roce,
+                pfc_roce.astype(np.float32),
+                network.queue_delay_us(net, occ_roce32), rel, net,
+                np.random.default_rng([seed, _STREAM_TRANSFER["roce"]]))
+            self._reduce_into(out["roce"], slice(0, T), res.time_us,
+                              res.delivered_pkts, res.total_pkts)
+
+        if sr is not None:
+            rate_d = np.ascontiguousarray(rates[:, chan_idx["sr"]])
+            pkt_time = net.pkt_time_us / np.maximum(rate_d * avail_clean,
+                                                    1e-3)
+            base = n_pkts * pkt_time + qd_clean + net.base_rtt_us / 2
+            # loss penalties exist only where packets dropped — scatter
+            idx = np.nonzero(sr.k)
+            kk = sr.k[idx].astype(np.float64)
+            ptf = pkt_time[idx].astype(np.float64)
+            detect = np.where(sr.tail_lost[idx], rel.rto_low_us,
+                              rel.nack_delay_us + net.base_rtt_us)
+            extra = np.zeros((T, n), dtype=np.float32)
+            extra[idx] = detect + kk * ptf
+            idx2 = np.nonzero(sr.k2)
+            extra[idx2] += (rel.rto_low_us
+                            + sr.k2[idx2] * pkt_time[idx2].astype(np.float64))
+            for d in ("irn", "srnic"):
+                if d not in out:
+                    continue
+                t = base + extra
+                if d == "srnic":
+                    t[idx] += (kk * rel.host_slowpath_us).astype(np.float32)
+                tr = out[d]
+                tr.nat_us[:] = t.max(axis=-1)
+                tr.deliv[:] = full_total
+                tr.total[:] = full_total
+                if tr.node_time_us is not None:
+                    tr.node_time_us[:] = t
+                    tr.node_deliv[:] = float(n_pkts)
+
+        if cel is not None:
+            rate_d = np.ascontiguousarray(rates[:, chan_idx["celeris"]])
+            serialize = n_pkts * (net.pkt_time_us
+                                  / np.maximum(rate_d * avail_clean, 1e-3))
+            t = (serialize + designs.CELERIS_QUEUE_OVERLAP * qd_clean
+                 + net.base_rtt_us / 2)
+            tr = out["celeris"]
+            tr.nat_us[:] = t.max(axis=-1)
+            tr.deliv[:] = full_total - cel.k.sum(axis=-1)
+            tr.total[:] = full_total
+            if tr.node_time_us is not None:
+                tr.node_time_us[:] = t
+                tr.node_deliv[:] = n_pkts - cel.k
+        return out
+
+    # -- shared (sweep) mode -------------------------------------------
+    def _traces_shared(self, design_list, n_rounds, seed, per_node_for,
+                       round_block) -> Dict[str, StepTrace]:
+        p = self.p
+        net, rel = p.net, p.rel
+        g = self._geometry(seed)
+        n, steps, n_pkts = g["n"], g["steps"], g["n_pkts"]
+        T = n_rounds * steps
+        src, dst, n_tors = g["src"], g["dst"], g["n_tors"]
+
+        if round_block is None:
+            round_block = max(1, _BLOCK_ELEMENTS // (steps * n))
+        block_steps = round_block * steps
+
+        fabric_gen = np.random.default_rng(g["fabric_seed"])
+        cnp_gen = np.random.default_rng([seed, _STREAM_CNP])
+        pfc_gen = np.random.default_rng([seed, _STREAM_PFC])
+        transfer_gens = {d: np.random.default_rng([seed, _STREAM_TRANSFER[d]])
+                         for d in design_list}
+
+        fab_state = network.FabricState(
+            bursting=np.zeros(n_tors, dtype=bool),
+            occupancy=np.full(n_tors, net.idle_occupancy))
+        cc_state = dcqcn.DcqcnState.init(n)
+
+        out = self._new_traces(design_list, T, steps, n, per_node_for)
+        for t0 in range(0, T, block_steps):
+            tb = min(block_steps, T - t0)
+            sl = slice(t0, t0 + tb)
+            u = fabric_gen.random((tb, network._ADVANCE_DRAWS, n_tors))
+            _, occ_tor, fab_state = network.occupancy_trace(net, u, fab_state)
+            ecn_p, drop_p, hot = _sparse_path_curves(net, occ_tor, src, dst)
+            occ32 = network.path_occupancy_trace(
+                net, occ_tor.astype(np.float32), src, dst)
+
+            cnp = np.zeros((tb, n), dtype=bool)
+            cnp[hot] = cnp_gen.random((hot.size, n)) < ecn_p[hot]
+            rate, cc_state = dcqcn.rate_trace(cnp, p.dcqcn, cc_state,
+                                              dtype=np.float32)
+
+            qd = network.queue_delay_us(net, occ32)
+            eff_rate = rate * network.avail_bandwidth(net, occ32)
+            for d in design_list:
+                pfc = (network.pfc_pause_trace(net, occ32, pfc_gen)
+                       if d == "roce" else np.zeros((tb, n), np.float32))
+                res = designs.transfer(d, n_pkts, occ32, eff_rate, drop_p,
+                                       pfc, qd, rel, net, transfer_gens[d])
+                self._reduce_into(out[d], sl, res.time_us,
+                                  res.delivered_pkts, res.total_pkts)
+        return out
+
+    # ------------------------------------------------------------------
+    def assemble(self, trace: StepTrace, seed: int, *,
+                 celeris_timeout_us: float | None = None,
+                 adaptive: bool = True, window: str = "round") -> RoundStats:
+        """Apply round structure (and, for Celeris, bounded windows) to a
+        step trace.  Sequential only across rounds, and only when the
+        adaptive controller is on."""
+        steps = trace.steps_per_round
+        R = trace.nat_us.shape[0] // steps
+        nat = trace.nat_us.reshape(R, steps)
+        deliv = trace.deliv.reshape(R, steps)
+        total = trace.total.reshape(R, steps)
+        tot_sum = np.maximum(total.sum(axis=1), 1.0)
+
+        if trace.design != "celeris":
+            return RoundStats(times_us=nat.sum(axis=1),
+                              recv_frac=deliv.sum(axis=1) / tot_sum,
+                              design=trace.design)
+
+        if window == "step" and trace.node_time_us is None:
+            raise ValueError(
+                "window='step' needs per-flow data: build the trace with "
+                "traces(..., per_node_for=('celeris',)) or use "
+                "BatchedEngine.run(), which sets it up")
+
+        init_to = (celeris_timeout_us or 50_000.0) / 1e6
+        cfg = timeout_mod.TimeoutConfig(
+            init_timeout=init_to, min_timeout=init_to * 0.25,
+            max_timeout=init_to * 8.0, alpha=0.25)
+
+        if window == "round" and not adaptive:
+            return self._assemble_round_window_fixed(
+                trace, nat, deliv, tot_sum, init_to * 1e6)
+
+        rng = np.random.default_rng([seed, _STREAM_WINDOW])
+        n = self.p.net.n_nodes
+        timeout = cfg.init_timeout
+        smoothed = np.full(n, cfg.init_timeout)
+        times = np.zeros(R)
+        fracs = np.ones(R)
+        cum = np.cumsum(nat, axis=1)
+        for r in range(R):
+            budget_us = timeout * 1e6
+            if window == "step":
+                step_to = budget_us / steps
+                t_node = trace.node_time_us[r * steps: (r + 1) * steps]
+                d_node = trace.node_deliv[r * steps: (r + 1) * steps]
+                late = np.clip((t_node - step_to)
+                               / np.maximum(t_node, 1e-9), 0, 1)
+                times[r] = np.minimum(nat[r], step_to).sum()
+                fracs[r] = (d_node * (1 - late)).sum() / tot_sum[r]
+            else:
+                total_t = cum[r, -1]
+                if total_t <= budget_us:
+                    times[r] = total_t
+                    fracs[r] = deliv[r].sum() / tot_sum[r]
+                else:
+                    times[r] = budget_us
+                    done = cum[r] <= budget_us
+                    bidx = int(np.argmax(~done))
+                    prev = float(cum[r, bidx - 1]) if bidx > 0 else 0.0
+                    part = (budget_us - prev) / max(nat[r, bidx], 1e-9)
+                    got = deliv[r][done].sum() + deliv[r, bidx] * part
+                    fracs[r] = got / tot_sum[r]
+            if adaptive:
+                node_frac = np.clip(
+                    fracs[r] + rng.normal(0, 0.002, n), 0.0, 1.0)
+                local, smoothed = timeout_mod.update_array(
+                    smoothed, times[r] / 1e6, node_frac, cfg)
+                timeout = timeout_mod.adopt_scalar(
+                    timeout_mod.coordinate(local), cfg)
+        return RoundStats(times_us=times, recv_frac=fracs, design="celeris")
+
+    @staticmethod
+    def _assemble_round_window_fixed(trace, nat, deliv, tot_sum, budget_us):
+        """Fixed bounded round window, all rounds at once (paper protocol)."""
+        cum = np.cumsum(nat, axis=1)
+        total_t = cum[:, -1]
+        over = total_t > budget_us
+        times = np.where(over, budget_us, total_t)
+        done = cum <= budget_us
+        bidx = np.argmax(~done, axis=1)
+        prev = np.where(
+            bidx > 0,
+            np.take_along_axis(cum, np.maximum(bidx - 1, 0)[:, None],
+                               axis=1)[:, 0],
+            0.0)
+        part = (budget_us - prev) / np.maximum(
+            np.take_along_axis(nat, bidx[:, None], axis=1)[:, 0], 1e-9)
+        got = ((deliv * done).sum(axis=1)
+               + np.take_along_axis(deliv, bidx[:, None], axis=1)[:, 0] * part)
+        fracs = np.where(over, got / tot_sum, deliv.sum(axis=1) / tot_sum)
+        return RoundStats(times_us=times, recv_frac=fracs, design="celeris")
+
+    # ------------------------------------------------------------------
+    def run(self, design: str, n_rounds: int = 400, *,
+            celeris_timeout_us: float | None = None,
+            adaptive: bool = True, window: str = "round",
+            seed: int | None = None, legacy_streams: bool = True
+            ) -> RoundStats:
+        """Simulate ``n_rounds`` AllReduce rounds for one NIC design."""
+        seed = self.p.seed if seed is None else seed
+        keep = (design,) if design == "celeris" and window == "step" else ()
+        if design == "celeris" and adaptive:
+            # the adaptive controller's per-round normal() draws make the
+            # sequential stream irreproducible — engine-native draws (the
+            # fabric trace is identical either way)
+            legacy_streams = False
+        tr = self.traces([design], n_rounds, seed,
+                         legacy_streams=legacy_streams, per_node_for=keep)
+        return self.assemble(tr[design], seed,
+                             celeris_timeout_us=celeris_timeout_us,
+                             adaptive=adaptive, window=window)
+
+    # ------------------------------------------------------------------
+    def paper_protocol(self, n_rounds: int = 400, seed: int = 0, *,
+                       legacy_streams: bool = True) -> Dict[str, RoundStats]:
+        """The paper's Fig.-2 protocol: RoCE baseline fixes the Celeris
+        window at median + 1 sigma; every design shares one physics
+        pass."""
+        tr = self.traces(designs.DESIGNS, n_rounds, seed,
+                         legacy_streams=legacy_streams)
+        out = {d: self.assemble(tr[d], seed)
+               for d in ("roce", "irn", "srnic")}
+        base = out["roce"]
+        to = float(np.percentile(base.times_us, 50) + base.times_us.std())
+        out["celeris"] = self.assemble(tr["celeris"], seed,
+                                       celeris_timeout_us=to,
+                                       adaptive=False, window="round")
+        return out
+
+
+# ----------------------------------------------------------------------
+# Parameter-sweep API
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BatchedSimParams:
+    """A sweep grid over the batched engine.
+
+    Celeris windows follow the paper protocol per (config, seed): fixed
+    at that seed's RoCE median + 1 sigma unless ``celeris_timeout_us``
+    pins them explicitly.
+    """
+    n_nodes: Sequence[int] = (128,)
+    message_mb: Sequence[float] = (25.0,)
+    seeds: Sequence[int] = (0,)
+    designs: Sequence[str] = designs.DESIGNS
+    n_rounds: int = 200
+    celeris_timeout_us: float | None = None
+    legacy_streams: bool = False      # sweeps share one fabric trace
+    base: SimParams = SimParams()
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """``stats[(design, n_nodes, message_mb, seed)] -> RoundStats``."""
+    params: BatchedSimParams
+    stats: Dict[tuple, RoundStats]
+
+    def p99_vs_scale(self, design: str, message_mb: float | None = None
+                     ) -> Dict[int, tuple[float, float]]:
+        """{n_nodes: (mean p99 over seeds, std over seeds)}."""
+        mb = message_mb if message_mb is not None else self.params.message_mb[0]
+        out = {}
+        for nn in self.params.n_nodes:
+            v = [self.stats[(design, nn, mb, s)].p99
+                 for s in self.params.seeds]
+            out[nn] = (float(np.mean(v)), float(np.std(v)))
+        return out
+
+    def summary_rows(self):
+        """Flat (design, n_nodes, message_mb, seed, p50, p99, loss) rows."""
+        rows = []
+        for (d, nn, mb, s), st in sorted(self.stats.items()):
+            rows.append((d, nn, mb, s, st.p50, st.p99, st.mean_loss))
+        return rows
+
+
+def sweep(params: BatchedSimParams | None = None, *, progress=None
+          ) -> SweepResult:
+    """Run the sweep grid; designs share one physics pass per (config,
+    seed).  ``progress``: optional callable(str) for liveness logging."""
+    bp = params or BatchedSimParams()
+    stats: Dict[tuple, RoundStats] = {}
+    for nn in bp.n_nodes:
+        for mb in bp.message_mb:
+            p = dataclasses.replace(
+                bp.base,
+                net=dataclasses.replace(bp.base.net, n_nodes=nn),
+                work=dataclasses.replace(bp.base.work,
+                                         message_bytes=int(mb * 2**20)))
+            eng = BatchedEngine(p)
+            for s in bp.seeds:
+                if progress is not None:
+                    progress(f"n_nodes={nn} message_mb={mb} seed={s}")
+                tr = eng.traces(list(bp.designs), bp.n_rounds, s,
+                                legacy_streams=bp.legacy_streams)
+                to = bp.celeris_timeout_us
+                if "celeris" in bp.designs and to is None:
+                    if "roce" in bp.designs:
+                        base = eng.assemble(tr["roce"], s)
+                        to = float(np.percentile(base.times_us, 50)
+                                   + base.times_us.std())
+                    else:
+                        to = 50_000.0
+                for d in bp.designs:
+                    if d == "celeris":
+                        stats[(d, nn, mb, s)] = eng.assemble(
+                            tr[d], s, celeris_timeout_us=to,
+                            adaptive=False, window="round")
+                    else:
+                        stats[(d, nn, mb, s)] = eng.assemble(tr[d], s)
+    return SweepResult(params=bp, stats=stats)
+
+
+# ----------------------------------------------------------------------
+# Fabric response curves (scalar-parameter forms of ClosFabric methods,
+# applied to whole traces)
+# ----------------------------------------------------------------------
+
+def _sparse_path_curves(net, occ_tor: np.ndarray, src: np.ndarray,
+                        dst: np.ndarray
+                        ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Exact f64 (ecn, drop, hot_rows) per (step, node), touching only
+    hot steps.
+
+    Both curves (shared with :class:`ClosFabric` via the module-level
+    functions in :mod:`network`) are exactly 0 below their occupancy
+    thresholds, and a path's occupancy is the max of its two ToR
+    occupancies (or idle), so steps where no ToR crosses the ECN
+    threshold (the lower of the two) contribute exact zeros — the
+    common case under rare bursts.  ``hot_rows`` are the step indices
+    that were actually evaluated (everything else is zero).
+    """
+    T = occ_tor.shape[0]
+    n = src.shape[0]
+    ecn = np.zeros((T, n))
+    drop = np.zeros((T, n))
+    rows = np.flatnonzero((occ_tor > net.ecn_threshold).any(axis=1))
+    if rows.size:
+        op = network.path_occupancy_trace(net, occ_tor[rows], src, dst)
+        ecn[rows] = network.ecn_mark_prob(net, op)
+        drop[rows] = network.drop_prob(net, op)
+    return ecn, drop, rows

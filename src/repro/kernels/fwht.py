@@ -41,9 +41,15 @@ def _kron_factors(n: int) -> tuple[int, int]:
     return 1 << la, 1 << (log - la)
 
 
-def _fwht_kernel(x_ref, ha_ref, hb_ref, o_ref, *, a: int, b: int):
+def _fwht_kernel(x_ref, ha_ref, hb_ref, *rest, a: int, b: int):
+    (o_ref,) = rest[-1:]
+    signs_ref = rest[0] if len(rest) == 2 else None
     rows = x_ref.shape[0]
     x = x_ref[...].astype(jnp.float32).reshape(rows, a, b)
+    if signs_ref is not None:
+        # fused Rademacher pre-multiply: one VPU op on the VMEM-resident
+        # tile instead of a separate HBM round-trip before the transform
+        x = x * signs_ref[...].reshape(a, b)[None]
     ha = ha_ref[...]
     hb = hb_ref[...]
     # t[r,k,j] = sum_l x[r,k,l] * hb[l,j]   (contract over l)
@@ -57,29 +63,45 @@ def _fwht_kernel(x_ref, ha_ref, hb_ref, o_ref, *, a: int, b: int):
     o_ref[...] = y.reshape(rows, a * b).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def fwht_pallas(x: jax.Array, *, block_rows: int = 128,
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "interpret", "scale"))
+def fwht_pallas(x: jax.Array, signs: jax.Array | None = None, *,
+                scale: float = 1.0, block_rows: int = 128,
                 interpret: bool = True) -> jax.Array:
     """FWHT along the last axis of a 2-D array via pallas_call.
 
     ``x`` must be (rows, n) with n a power of two >= 2 and rows a
     multiple of ``block_rows`` (ops.py handles padding).
+
+    Optional fusions (used by ``coding.encode``, which otherwise pays
+    two extra full HBM round-trips per call):
+
+    - ``signs`` (n,): Rademacher diagonal multiplied into the input tile
+      in VMEM before the transform;
+    - ``scale``: static scalar folded into the left Hadamard factor
+      (entries become ±scale), so the normalization costs zero extra
+      FLOPs on the MXU path.
     """
     rows, n = x.shape
     assert rows % block_rows == 0, (rows, block_rows)
     a, b = _kron_factors(n)
-    ha = ref.hadamard_matrix(a)
+    ha = ref.hadamard_matrix(a) * jnp.float32(scale)
     hb = ref.hadamard_matrix(b)
     grid = (rows // block_rows,)
+    in_specs = [
+        pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+        pl.BlockSpec((a, a), lambda i: (0, 0)),
+        pl.BlockSpec((b, b), lambda i: (0, 0)),
+    ]
+    operands = [x, ha, hb]
+    if signs is not None:
+        in_specs.append(pl.BlockSpec((1, n), lambda i: (0, 0)))
+        operands.append(signs.reshape(1, n).astype(jnp.float32))
     return pl.pallas_call(
         functools.partial(_fwht_kernel, a=a, b=b),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
-            pl.BlockSpec((a, a), lambda i: (0, 0)),
-            pl.BlockSpec((b, b), lambda i: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, n), x.dtype),
         interpret=interpret,
-    )(x, ha, hb)
+    )(*operands)

@@ -31,14 +31,23 @@ def _pad_rows(x: jax.Array, mult: int) -> tuple[jax.Array, int]:
     return x, rows
 
 
-def fwht(x: jax.Array, *, use_pallas: bool = True, block_rows: int = 128) -> jax.Array:
-    """Unnormalized FWHT along the last axis of a 2-D array."""
+def fwht(x: jax.Array, *, signs: jax.Array | None = None, scale: float = 1.0,
+         use_pallas: bool = True, block_rows: int = 128) -> jax.Array:
+    """FWHT along the last axis of a 2-D array (unnormalized by default).
+
+    ``signs`` (n,) and ``scale`` fuse the Rademacher pre-multiply and
+    the normalization into the kernel (the Pallas path keeps them in
+    VMEM / folds the scale into a Hadamard factor); the jnp-oracle path
+    applies them unfused with identical semantics.
+    """
     if not use_pallas:
-        return ref.fwht(x)
+        out = ref.fwht(x if signs is None else x * signs[None, :])
+        return out if scale == 1.0 else out * scale
     rows, n = x.shape
     block_rows = min(block_rows, max(8, rows))
     xp, rows0 = _pad_rows(x, block_rows)
-    out = _fwht.fwht_pallas(xp, block_rows=block_rows, interpret=INTERPRET)
+    out = _fwht.fwht_pallas(xp, signs, scale=scale, block_rows=block_rows,
+                            interpret=INTERPRET)
     return out[:rows0]
 
 

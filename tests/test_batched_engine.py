@@ -1,0 +1,235 @@
+"""Batched transport engine: seeded regression + batched/sequential
+agreement properties (ISSUE 1 acceptance tests).
+
+The sequential pre-refactor loop is preserved as
+:class:`repro.core.transport.reference.SequentialCollectiveSimulator`;
+the engine's legacy-stream mode must reproduce its seeded statistics —
+bit-near-exactly for irn/srnic/celeris-fixed (their random streams are
+replayed), within a few percent for RoCE (engine-native transfer draws
+on a bit-exact fabric trace).
+"""
+import json
+import os
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:                     # container lacks hypothesis
+    from _propcheck import hypothesis, st
+import numpy as np
+import pytest
+
+from repro.core import timeout as tmod
+from repro.core.transport import (BatchedEngine, BatchedSimParams,
+                                  CollectiveSimulator, NetworkParams,
+                                  SimParams, sweep)
+from repro.core.transport import dcqcn, network, replay
+from repro.core.transport.params import DcqcnParams
+from repro.core.transport.reference import SequentialCollectiveSimulator
+
+SMALL = SimParams(net=NetworkParams(n_nodes=32, burst_on_prob=0.0008))
+
+
+# ------------------------------------------------- engine vs sequential
+
+def test_selective_repeat_matches_sequential_exactly():
+    """irn/srnic streams are replayed bit-exactly -> per-round times
+    agree to float32 rounding, round by round."""
+    for design in ("irn", "srnic"):
+        seq = SequentialCollectiveSimulator(SMALL).run(design, 60, seed=3)
+        bat = BatchedEngine(SMALL).run(design, 60, seed=3)
+        np.testing.assert_allclose(bat.times_us, seq.times_us, rtol=2e-5)
+        np.testing.assert_array_equal(bat.recv_frac, seq.recv_frac)
+
+
+def test_celeris_fixed_window_matches_sequential_exactly():
+    seq = SequentialCollectiveSimulator(SMALL).run(
+        "celeris", 60, celeris_timeout_us=20_000.0, adaptive=False,
+        window="round", seed=4)
+    bat = BatchedEngine(SMALL).run(
+        "celeris", 60, celeris_timeout_us=20_000.0, adaptive=False,
+        window="round", seed=4)
+    np.testing.assert_allclose(bat.times_us, seq.times_us, rtol=2e-5)
+    np.testing.assert_allclose(bat.recv_frac, seq.recv_frac, atol=1e-6)
+
+
+def test_roce_matches_sequential_statistically():
+    """RoCE transfer draws are engine-native (its `integers` consumption
+    is irreproducible) but ride a bit-exact fabric trace: medians agree
+    tightly, tails within transfer-draw noise."""
+    seq = SequentialCollectiveSimulator(SMALL).run("roce", 120, seed=5)
+    bat = BatchedEngine(SMALL).run("roce", 120, seed=5)
+    assert abs(bat.p50 / seq.p50 - 1) < 0.01
+    assert abs(bat.p99 / seq.p99 - 1) < 0.15
+    # idle rounds carry no randomness at all -> identical
+    idle = seq.times_us == np.median(seq.times_us)
+    np.testing.assert_allclose(bat.times_us[idle], seq.times_us[idle],
+                               rtol=2e-5)
+
+
+@pytest.mark.slow
+def test_paper_protocol_pinned_to_prerefactor_values():
+    """Fig.-2 protocol (300 rounds, 128 nodes) vs recorded pre-refactor
+    stats: p50/p99 within 5%, loss within 0.5pp (acceptance criterion)."""
+    ref_path = os.path.join(os.path.dirname(__file__), "data",
+                            "paper_protocol_seed_stats.json")
+    ref = json.load(open(ref_path))
+    stats = CollectiveSimulator(SimParams()).paper_protocol(
+        n_rounds=300, seed=0)
+    for d, s in stats.items():
+        assert abs(s.p50 / ref[d]["p50_us"] - 1) < 0.01, d
+        assert abs(s.p99 / ref[d]["p99_us"] - 1) < 0.05, d
+        assert abs(s.mean_loss - ref[d]["data_loss"]) < 0.005, d
+
+
+# ------------------------------------------------- component properties
+
+@hypothesis.given(st.integers(0, 2**31 - 1))
+@hypothesis.settings(max_examples=8, deadline=None)
+def test_occupancy_trace_bitexact_vs_advance(seed):
+    p = NetworkParams(n_nodes=32, burst_on_prob=0.003)
+    K = p.n_nodes // p.nodes_per_tor
+    T = 400
+    fab = network.ClosFabric(p, seed=seed)
+    seq_occ = np.empty((T, K))
+    seq_b = np.empty((T, K), bool)
+    for t in range(T):
+        fab.advance()
+        seq_occ[t] = fab.state.occupancy
+        seq_b[t] = fab.state.bursting
+    u = np.random.default_rng(seed).random((T, 3, K))
+    st0 = network.FabricState(bursting=np.zeros(K, bool),
+                              occupancy=np.full(K, p.idle_occupancy))
+    b, occ, fin = network.occupancy_trace(p, u, st0)
+    np.testing.assert_array_equal(b, seq_b)
+    np.testing.assert_array_equal(occ, seq_occ)     # bitwise
+    np.testing.assert_array_equal(fin.bursting, seq_b[-1])
+
+
+@hypothesis.given(st.integers(0, 2**31 - 1))
+@hypothesis.settings(max_examples=4, deadline=None)
+def test_roce_fabric_trace_bitexact(seed):
+    p = NetworkParams(n_nodes=32, burst_on_prob=0.003)
+    n = p.n_nodes
+    src = np.arange(n)
+    dst = (src + 1) % n
+    T = 600
+    fab = network.ClosFabric(p, seed=seed)
+    seq_occ = np.empty((T, 2))
+    seq_pfc = np.empty((T, n))
+    for t in range(T):
+        fab.advance()
+        seq_occ[t] = fab.state.occupancy
+        seq_pfc[t] = fab.pfc_pause_us(fab.path_occupancy(src, dst))
+    occ, pfc = network.roce_fabric_trace(p, seed, src, dst, T, window=64)
+    np.testing.assert_array_equal(occ, seq_occ)     # bitwise
+    np.testing.assert_array_equal(pfc, seq_pfc)
+
+
+def _random_cnp(seed, burst_prob, T=300, n=12):
+    rng = np.random.default_rng(seed)
+    prob = np.zeros((T, n))
+    for s in rng.integers(0, T - 20, 6):
+        prob[s: s + 15] = burst_prob
+    return rng.random((T, n)) < prob
+
+
+@hypothesis.given(st.integers(0, 2**31 - 1), st.floats(0.05, 0.6))
+@hypothesis.settings(max_examples=8, deadline=None)
+def test_rate_trace_matches_step_loop(seed, burst_prob):
+    p = DcqcnParams()
+    cnp = _random_cnp(seed, burst_prob)
+    state = dcqcn.DcqcnState.init(cnp.shape[1])
+    ref_out = np.empty(cnp.shape)
+    for t in range(cnp.shape[0]):
+        ref_out[t] = state.rate
+        state = dcqcn.step(state, cnp[t], p)
+    got, fin = dcqcn.rate_trace(cnp, p)
+    np.testing.assert_allclose(got, ref_out, atol=1e-12)
+    np.testing.assert_allclose(fin.rate, state.rate, atol=1e-12)
+    np.testing.assert_array_equal(fin.good_stages, state.good_stages)
+
+
+def test_replay_matches_generator_order():
+    """The stream replay reproduces the sequential simulator's exact
+    draw sequence (binomials + tail + cnp uniforms)."""
+    rng = np.random.default_rng(9)
+    T, n, n_pkts = 200, 16, 50
+    drop_p = np.zeros((T, n))
+    hot = rng.integers(0, T, 30)
+    drop_p[hot] = rng.uniform(0, 0.025, (hot.size, n)) * (
+        rng.random((hot.size, n)) < 0.5)
+    ecn = np.clip(drop_p * 20 + rng.uniform(-0.5, 0.02, (T, n)), 0, 1)
+
+    # sequential consumption, exactly like the old irn loop
+    seed = 12345
+    gen = np.random.default_rng(seed)
+    gen.integers(2**31)
+    k_ref = np.zeros((T, n), int)
+    tail_ref = np.zeros((T, n), bool)
+    k2_ref = np.zeros((T, n), int)
+    cnp_ref = np.zeros((T, n), bool)
+    for t in range(T):
+        k_ref[t] = gen.binomial(n_pkts, drop_p[t])
+        tail_ref[t] = gen.random(n) < drop_p[t]
+        k2_ref[t] = gen.binomial(k_ref[t], drop_p[t])
+        cnp_ref[t] = gen.random(n) < ecn[t]
+    sr = replay.replay_selective_repeat(seed, n_pkts, drop_p, ecn)
+    np.testing.assert_array_equal(sr.k, k_ref)
+    np.testing.assert_array_equal(sr.tail_lost, tail_ref)
+    np.testing.assert_array_equal(sr.k2, k2_ref)
+    np.testing.assert_array_equal(sr.cnp, cnp_ref)
+
+    # celeris layout: [binomial | cnp]
+    gen = np.random.default_rng(seed)
+    gen.integers(2**31)
+    kc_ref = np.zeros((T, n), int)
+    cnpc_ref = np.zeros((T, n), bool)
+    for t in range(T):
+        kc_ref[t] = gen.binomial(n_pkts, drop_p[t])
+        cnpc_ref[t] = gen.random(n) < ecn[t]
+    cel = replay.replay_celeris(seed, n_pkts, drop_p, ecn)
+    np.testing.assert_array_equal(cel.k, kc_ref)
+    np.testing.assert_array_equal(cel.cnp, cnpc_ref)
+
+
+def test_vectorized_timeout_matches_controllers():
+    cfg = tmod.TimeoutConfig(init_timeout=0.05)
+    ctrls = [tmod.TimeoutController(cfg) for _ in range(7)]
+    smoothed = np.full(7, cfg.init_timeout)
+    timeout = cfg.init_timeout
+    rng = np.random.default_rng(0)
+    for _ in range(30):
+        dur = float(rng.uniform(0.01, 0.2))
+        fracs = rng.uniform(0.3, 1.0, 7)
+        local = [c.update(dur, fracs[i]) for i, c in enumerate(ctrls)]
+        agreed = tmod.coordinate(local)
+        for c in ctrls:
+            c.adopt(agreed)
+        vec_local, smoothed = tmod.update_array(smoothed, dur, fracs, cfg)
+        timeout = tmod.adopt_scalar(tmod.coordinate(vec_local), cfg)
+        np.testing.assert_allclose(vec_local, local, rtol=1e-12)
+        assert timeout == pytest.approx(ctrls[0].timeout, rel=1e-12)
+
+
+# ------------------------------------------------- sweep API
+
+def test_sweep_api_smoke():
+    res = sweep(BatchedSimParams(
+        n_nodes=(32,), message_mb=(4.0,), seeds=(0, 1),
+        designs=("roce", "celeris"), n_rounds=20,
+        base=SimParams(net=NetworkParams(n_nodes=32,
+                                         burst_on_prob=0.0008))))
+    assert len(res.stats) == 4
+    scale = res.p99_vs_scale("celeris", 4.0)
+    assert 32 in scale and scale[32][0] > 0
+    rows = res.summary_rows()
+    assert len(rows) == 4 and all(len(r) == 7 for r in rows)
+
+
+@pytest.mark.slow
+def test_sweep_scales_to_512():
+    res = sweep(BatchedSimParams(n_nodes=(512,), seeds=(0,),
+                                 designs=("roce", "celeris"), n_rounds=30))
+    s = res.stats[("celeris", 512, 25.0, 0)]
+    assert s.p99 > 0 and 0 <= s.mean_loss < 0.2

@@ -1,6 +1,9 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis."""
-import hypothesis
-import hypothesis.strategies as st
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:                     # container lacks hypothesis
+    from _propcheck import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

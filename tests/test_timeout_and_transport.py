@@ -1,6 +1,9 @@
 """Timeout controller + transport simulator behavior (paper §III-B, §IV)."""
-import hypothesis
-import hypothesis.strategies as st
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:                     # container lacks hypothesis
+    from _propcheck import hypothesis, st
 import jax.numpy as jnp
 import numpy as np
 import pytest
