@@ -1,0 +1,90 @@
+"""Compare a fresh benchmark JSON against the committed baseline.
+
+Usage:
+    python benchmarks/check_regression.py NEW.json [BASELINE.json]
+        [--tol 0.25]
+
+Compares every *simulation metric* key present in BOTH files and fails
+(exit 1) when any relative deviation exceeds ``--tol`` (default 25%).
+Wall-clock / microsecond timing keys are machine-dependent and skipped;
+the simulation metrics (engine p99s, losses, drop rates, recovery
+fractions) are deterministic given seeds, so drift there means behavior
+changed.
+"""
+import argparse
+import json
+import os
+import sys
+
+_SKIP_SUFFIXES = ("_wall_s", "_us", "_speedup_x")
+_SKIP_PREFIXES = ("total_bench_wall_s",)
+
+_DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_sim.json")
+
+
+def volatile(key: str) -> bool:
+    return (key.endswith(_SKIP_SUFFIXES) or key.startswith(_SKIP_PREFIXES)
+            or "kernel_" in key)
+
+
+def _tier(key: str) -> str:
+    return "smoke" if key.startswith("smoke_") else "full"
+
+
+def compare(new: dict, base: dict, tol: float):
+    """Returns (checked, failures, missing).
+
+    ``missing`` lists baseline metrics of a tier the new run clearly
+    executed (it emitted other keys of that tier) that the new run no
+    longer emits — a silently-disappeared metric must fail the gate,
+    not shrink it.
+    """
+    checked, failures = [], []
+    for key in sorted(set(new) & set(base)):
+        if volatile(key):
+            continue
+        try:
+            b, n = float(base[key]), float(new[key])
+        except (TypeError, ValueError):
+            continue
+        rel = abs(n - b) / max(abs(b), 1e-9)
+        checked.append((key, b, n, rel))
+        if rel > tol:
+            failures.append((key, b, n, rel))
+    new_tiers = {_tier(k) for k in new if not volatile(k)}
+    missing = [k for k in sorted(base)
+               if not volatile(k) and _tier(k) in new_tiers
+               and k not in new]
+    return checked, failures, missing
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("new_json")
+    ap.add_argument("baseline_json", nargs="?", default=_DEFAULT_BASELINE)
+    ap.add_argument("--tol", type=float, default=0.25)
+    args = ap.parse_args()
+    with open(args.new_json) as f:
+        new = json.load(f)
+    with open(args.baseline_json) as f:
+        base = json.load(f)
+    new_path, base_path, tol = args.new_json, args.baseline_json, args.tol
+
+    checked, failures, missing = compare(new, base, tol)
+    if not checked:
+        sys.exit(f"no comparable keys between {new_path} and {base_path} "
+                 "— baseline missing the tier that just ran?")
+    for key, b, n, rel in checked:
+        mark = "FAIL" if rel > tol else "ok  "
+        print(f"{mark} {key}: baseline={b} new={n} rel={rel*100:.1f}%")
+    for key in missing:
+        print(f"GONE {key}: in baseline but not emitted by this run")
+    print(f"\n{len(checked)} metrics checked, {len(failures)} over the "
+          f"{tol*100:.0f}% threshold, {len(missing)} disappeared")
+    if failures or missing:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Fig. 1, end-to-end: the transport engine drives the trainer.
+
+This is the closed loop the paper argues for: the batched transport
+engine simulates a 128-node Celeris fabric under three window
+tightnesses, the resulting per-round delivered fractions become the
+trainer's per-step drop schedule (``repro.core.transport.coupling``),
+and the same smoke LM trains under three collective modes:
+
+- **exact**       — lossless all-reduce (RoCE-semantics baseline);
+- **lossy**       — best-effort, no coding: dropped wire rows are holes;
+- **lossy+hadamard** — best-effort + randomized-Hadamard recovery
+  (paper §III-B).
+
+Headline metric per regime: *recovery* = fraction of the exact run's
+loss decrease that the lossy+hadamard run achieves,
+``(loss0 - final_had) / (loss0 - final_exact)``.  The paper's Fig.-1
+claim is that at its operating regime (<=5% drop) coding keeps training
+within noise of lossless — recovery >= 0.9 is the acceptance bar.
+"""
+import numpy as np
+
+import repro.configs as C
+from repro.core.transport import NetworkParams, SimParams, coupling
+from repro.data.pipeline import DataConfig
+from repro.optim.adamw import OptConfig
+from repro.train.train_step import CelerisConfig
+from repro.train.trainer import Trainer
+
+# timeout_scale -> realized mean drop at 128 nodes (see coupling docs):
+# 1.0 ~ 1% (the protocol operating point), 0.6 ~ 4.5% (the paper's
+# Fig.-1 <=5% regime), 0.4 ~ 25% (well past tolerance).
+REGIMES = {"light": 1.0, "paper": 0.6, "heavy": 0.4}
+# 32-node smoke fabric: same burst-rate downscale the tier-1 transport
+# tests use; scale 0.8 lands near the paper's ~5% regime there.
+SMOKE_PARAMS = SimParams(net=NetworkParams(n_nodes=32,
+                                           burst_on_prob=0.0008))
+SMOKE_REGIMES = {"paper": 0.8}
+
+
+def _train(cfg, steps, seed, celeris, straggler):
+    tr = Trainer(cfg, data_cfg=DataConfig(vocab_size=cfg.vocab_size,
+                                          seq_len=64, global_batch=8,
+                                          seed=1),
+                 opt_cfg=OptConfig(lr=1e-3, warmup_steps=10,
+                                   total_steps=500),
+                 celeris=celeris, seed=seed, straggler=straggler)
+    return tr.run(steps)
+
+
+def run(steps=60, seed=0, smoke=False, prefix="fig1e2e"):
+    if smoke:
+        regimes, params, n_nodes = SMOKE_REGIMES, SMOKE_PARAMS, 32
+    else:
+        regimes, params, n_nodes = REGIMES, None, 128
+
+    cfg = C.get_smoke("qwen2-0.5b")
+    rows = []
+    print(f"\n== Fig. 1 e2e: engine-driven drop schedules "
+          f"({n_nodes}-node fabric), exact vs lossy vs lossy+hadamard ==")
+
+    h_exact = _train(cfg, steps, seed, CelerisConfig(mode="exact"), None)
+    loss0 = h_exact["loss"][0]
+    final_exact = float(np.mean(h_exact["loss"][-5:]))
+    delta_exact = loss0 - final_exact
+    rows.append((f"{prefix}_final_loss_exact", round(final_exact, 4), None))
+    print(f"exact: loss {loss0:.3f} -> {final_exact:.4f}")
+
+    for name, scale in regimes.items():
+        sched = coupling.schedule_from_engine(
+            steps, seed=seed, params=params, n_nodes=None if params else
+            n_nodes, timeout_scale=scale)
+        rows.append((f"{prefix}_drop_mean_{name}",
+                     round(sched.mean, 4), None))
+        finals = {}
+        for mode in ("lossy", "lossy_hadamard"):
+            h = _train(cfg, steps, seed,
+                       CelerisConfig(mode=mode, min_coded_size=1024),
+                       coupling.EngineStragglerModel(sched))
+            finals[mode] = float(np.mean(h["loss"][-5:]))
+            rows.append((f"{prefix}_final_loss_{mode}_{name}",
+                         round(finals[mode], 4), None))
+        recovery = (loss0 - finals["lossy_hadamard"]) / max(delta_exact,
+                                                            1e-9)
+        rows.append((f"{prefix}_recovery_{name}", round(recovery, 4),
+                     0.9 if name == "paper" else None))
+        print(f"{name:6s} (window x{scale}, mean drop "
+              f"{sched.mean*100:5.2f}%): "
+              f"lossy {finals['lossy']:.4f}  "
+              f"+hadamard {finals['lossy_hadamard']:.4f}  "
+              f"recovery {recovery*100:5.1f}%")
+
+    paper_rec = [v for n, v, _ in rows
+                 if n == f"{prefix}_recovery_paper"][0]
+    verdict = "PASS" if paper_rec >= 0.9 else "FAIL"
+    print(f"paper-regime recovery {paper_rec*100:.1f}% "
+          f"(claim: >=90%) -> {verdict}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -275,6 +275,23 @@ def _from_tiles(t: jax.Array, plan: NdPlan) -> jax.Array:
     return g.transpose(inv)
 
 
+# Public tile layout (no rotation): the plain-lossy ablation path drops
+# wire rows straight out of this layout, so what Hadamard buys is exactly
+# the delta between the two modes on identical tilings.
+def to_tiles_nd(g: jax.Array, plan: NdPlan) -> jax.Array:
+    return _to_tiles(g, plan)
+
+
+def from_tiles_nd(t: jax.Array, plan: NdPlan) -> jax.Array:
+    return _from_tiles(t, plan)
+
+
+def fwht_nd(t: jax.Array, plan: NdPlan) -> jax.Array:
+    """Normalized (self-inverse) FWHT along the rotation axis of a
+    (tiles, n_rot, Ns) block: fwht_nd(fwht_nd(t)) == t."""
+    return _fwht_axis1(t) * (plan.n_rot ** -0.5)
+
+
 def encode_nd(g: jax.Array, signs: jax.Array, plan: NdPlan) -> jax.Array:
     """leaf -> rotated tiles (tiles, n_rot, Ns); signs: (n_rot,)."""
     t = _to_tiles(g.astype(jnp.float32), plan)

@@ -27,18 +27,14 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from repro import sharding as shd
 from repro.core import coding
 
 AxisNames = str | Sequence[str]
 
 
 def _axis_size(axis_name: AxisNames) -> int:
-    if isinstance(axis_name, str):
-        return jax.lax.axis_size(axis_name)
-    size = 1
-    for a in axis_name:
-        size *= jax.lax.axis_size(a)
-    return size
+    return shd.axis_size(axis_name)
 
 
 def _peer_key(key: jax.Array, axis_name: AxisNames) -> jax.Array:
@@ -119,7 +115,7 @@ def lossy_all_gather(x: jax.Array, axis_name: str, *, key: jax.Array,
 
     Returns (gathered (P, ...) or tiled, arrived mask (P,)).
     """
-    p = jax.lax.axis_size(axis_name)
+    p = shd.axis_size(axis_name)
     me = jax.lax.axis_index(axis_name)
     mask = arrival_mask(_peer_key(key, axis_name), p, drop_rate)
     arrived_here = mask[me]
@@ -167,7 +163,7 @@ def lossy_all_to_all(x: jax.Array, axis_name: str, *, key: jax.Array,
     MoE layer routes un-arrived tokens to the shared-expert fallback
     (paper §II-B "expert fallback paths").
     """
-    p = jax.lax.axis_size(axis_name)
+    p = shd.axis_size(axis_name)
     assert x.shape[split_axis] == p, (x.shape, split_axis, p)
     # (src=me, dst=j) arrival coin for every destination block
     mask_out = arrival_mask(_peer_key(key, axis_name), p, drop_rate)  # (P,)

@@ -4,9 +4,15 @@ from repro.core.transport.engine import (
     BatchedEngine, BatchedSimParams, RoundStats, SweepResult, sweep)
 from repro.core.transport.simulator import CollectiveSimulator
 from repro.core.transport.designs import DESIGNS
+from repro.core.transport.coupling import (
+    CollectiveMode, DropSchedule, EngineStragglerModel, LatencyTail,
+    closed_form_schedule, schedule_from_engine, schedule_from_round_stats)
 
 __all__ = [
     "SimParams", "NetworkParams", "DcqcnParams", "ReliabilityParams",
     "WorkloadParams", "CollectiveSimulator", "RoundStats", "DESIGNS",
     "BatchedEngine", "BatchedSimParams", "SweepResult", "sweep",
+    "CollectiveMode", "DropSchedule", "EngineStragglerModel", "LatencyTail",
+    "closed_form_schedule", "schedule_from_engine",
+    "schedule_from_round_stats",
 ]

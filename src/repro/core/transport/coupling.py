@@ -1,0 +1,228 @@
+"""Transport→trainer coupling (closes the paper's loop).
+
+The transport engine (:mod:`repro.core.transport.engine`) produces
+per-round delivered fractions under bounded Celeris windows; the lossy
+collectives (:mod:`repro.core.lossy_collectives`) and the trainer's
+gradient sync consume a per-step ``drop_rate``.  Until now those ends
+were hand-fed constants.  This module is the bridge:
+
+- :class:`DropSchedule` — a per-step drop-probability trace with
+  provenance, consumed one step at a time by the trainer;
+- :func:`schedule_from_round_stats` — engine ``RoundStats`` → schedule
+  (drop = 1 - delivered fraction per round; one AllReduce round maps to
+  one train step);
+- :func:`schedule_from_engine` — run the engine at a given scale /
+  window tightness and return the resulting schedule (the paper-Fig.-1
+  drop regimes are different ``timeout_scale`` settings of one knob);
+- :func:`closed_form_schedule` / :class:`LatencyTail` — the closed-form
+  lognormal-tail alternative, P(chunk latency > window), matching the
+  trainer's standalone straggler model with bursts disabled;
+- :class:`EngineStragglerModel` — adapts a schedule to the Trainer's
+  ``straggler.drop_rate(timeout, rng)`` interface (duck-typed so core
+  never imports train);
+- :class:`CollectiveMode` — the exact | lossy | lossy+hadamard switch
+  the train step dispatches on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from math import erf, sqrt
+
+import numpy as np
+
+from repro.core.transport.engine import BatchedEngine, RoundStats
+from repro.core.transport.params import SimParams
+
+
+class CollectiveMode(enum.Enum):
+    """Gradient-sync collective flavor for the train step.
+
+    - ``EXACT``: lossless all-reduce (RoCE-like semantics, the baseline);
+    - ``LOSSY``: best-effort without coding — the receiver's bounded
+      window truncates the payload, so a wire row that misses it is a
+      hole in the raw gradient (lost from every peer at once, no
+      rescaling; see ``train_step._mask_grads_plain``);
+    - ``LOSSY_HADAMARD``: best-effort + randomized-Hadamard coding, the
+      paper's §III-B recovery path — per-(peer, wire-row) arrival
+      masks with count-unbiased decode, unbiased even through holes.
+    """
+    EXACT = "exact"
+    LOSSY = "lossy"
+    LOSSY_HADAMARD = "lossy_hadamard"
+
+    @classmethod
+    def parse(cls, mode: "CollectiveMode | str") -> "CollectiveMode":
+        if isinstance(mode, cls):
+            return mode
+        key = str(mode).lower().replace("+", "_").replace("-", "_")
+        for m in cls:
+            if m.value == key:
+                return m
+        raise ValueError(f"unknown collective mode {mode!r}; choose from "
+                         f"{[m.value for m in cls]}")
+
+    @property
+    def lossy(self) -> bool:
+        return self is not CollectiveMode.EXACT
+
+    @property
+    def coded(self) -> bool:
+        return self is CollectiveMode.LOSSY_HADAMARD
+
+
+# ----------------------------------------------------------------------
+# Drop schedules
+# ----------------------------------------------------------------------
+
+# The collectives emulate loss at wire-chunk granularity; a drop rate
+# past ~0.5 means the window is mis-tuned, not a tail event, and the
+# unbias factors blow up variance — clamp like the trainer's model does.
+MAX_DROP = 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class DropSchedule:
+    """Per-train-step drop probabilities with provenance.
+
+    ``rates[i]`` is the drop probability for train step i; steps past
+    the end wrap around (an engine trace is a stationary sample of the
+    fabric, so tiling it is the natural extension).
+    """
+    rates: np.ndarray
+    source: str = "constant"
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "rates",
+            np.clip(np.asarray(self.rates, dtype=np.float64).reshape(-1),
+                    0.0, MAX_DROP))
+        if self.rates.size == 0:
+            raise ValueError("empty drop schedule")
+
+    def rate(self, step: int) -> float:
+        return float(self.rates[step % self.rates.size])
+
+    @property
+    def mean(self) -> float:
+        return float(self.rates.mean())
+
+    @property
+    def p99(self) -> float:
+        return float(np.percentile(self.rates, 99))
+
+    @classmethod
+    def constant(cls, p: float, n_steps: int = 1) -> "DropSchedule":
+        return cls(rates=np.full(n_steps, p), source=f"constant({p})")
+
+
+def schedule_from_round_stats(stats: RoundStats, *,
+                              source: str | None = None) -> DropSchedule:
+    """Engine round statistics → per-step schedule (round i ≡ step i)."""
+    return DropSchedule(
+        rates=1.0 - np.asarray(stats.recv_frac, dtype=np.float64),
+        source=source or f"engine:{stats.design}")
+
+
+def schedule_from_engine(n_rounds: int, seed: int = 0, *,
+                         params: SimParams | None = None,
+                         n_nodes: int | None = None,
+                         message_mb: float | None = None,
+                         design: str = "celeris",
+                         timeout_scale: float = 1.0,
+                         adaptive: bool = False,
+                         window: str = "round",
+                         legacy_streams: bool = False) -> DropSchedule:
+    """Run the transport engine and derive the drop schedule it implies.
+
+    The Celeris window follows the paper protocol — fixed at the RoCE
+    baseline's median + 1 sigma on the *same* fabric trace — scaled by
+    ``timeout_scale``: 1.0 is the paper's Fig.-1 operating point (~1%
+    loss at 128 nodes), smaller values tighten the window into the
+    heavier drop regimes, larger values relax it.  ``adaptive=True``
+    runs the per-round timeout controller (EWMA + cluster median)
+    instead of the fixed window.
+
+    Lossless designs ("roce", "irn", "srnic") yield all-zero schedules —
+    useful as the exact-collective control.
+    """
+    p = params or SimParams()
+    if n_nodes is not None:
+        p = dataclasses.replace(
+            p, net=dataclasses.replace(p.net, n_nodes=n_nodes))
+    if message_mb is not None:
+        p = dataclasses.replace(
+            p, work=dataclasses.replace(p.work,
+                                        message_bytes=int(message_mb * 2**20)))
+    eng = BatchedEngine(p)
+    designs_needed = [design] if design != "celeris" else ["roce", "celeris"]
+    tr = eng.traces(designs_needed, n_rounds, seed,
+                    legacy_streams=legacy_streams)
+    if design != "celeris":
+        stats = eng.assemble(tr[design], seed)
+    else:
+        base = eng.assemble(tr["roce"], seed)
+        to = float((np.percentile(base.times_us, 50) + base.times_us.std())
+                   * timeout_scale)
+        stats = eng.assemble(tr["celeris"], seed, celeris_timeout_us=to,
+                             adaptive=adaptive, window=window)
+    tag = (f"engine:{design} n={p.net.n_nodes} seed={seed} "
+           f"scale={timeout_scale}" + (" adaptive" if adaptive else ""))
+    return schedule_from_round_stats(stats, source=tag)
+
+
+# ----------------------------------------------------------------------
+# Closed-form alternative (no engine run needed)
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LatencyTail:
+    """Lognormal per-chunk latency tail, the transport model's contention
+    shape.  Identical math to the trainer's standalone
+    ``StragglerModel`` with bursts disabled — the coupling test pins the
+    two against each other."""
+    median_latency: float = 1.0       # in units of clean step time
+    sigma: float = 0.6
+
+    def drop_rate(self, timeout: float) -> float:
+        """P(latency > timeout) under lognormal(ln median, sigma)."""
+        z = ((np.log(max(float(timeout), 1e-9))
+              - np.log(self.median_latency)) / self.sigma)
+        p_late = 0.5 * (1.0 - erf(z / sqrt(2.0)))
+        return float(np.clip(p_late, 0.0, MAX_DROP))
+
+
+def closed_form_schedule(timeouts, model: LatencyTail | None = None
+                         ) -> DropSchedule:
+    """Per-step drop from a timeout trace (e.g. the controller's
+    adopted windows), without running the engine."""
+    m = model or LatencyTail()
+    rates = np.array([m.drop_rate(t) for t in np.atleast_1d(timeouts)])
+    return DropSchedule(rates=rates, source="closed_form")
+
+
+# ----------------------------------------------------------------------
+# Trainer adapter
+# ----------------------------------------------------------------------
+
+class EngineStragglerModel:
+    """Feed an engine-derived schedule into the Trainer.
+
+    Duck-typed replacement for ``repro.train.trainer.StragglerModel``:
+    the trainer calls ``drop_rate(timeout, rng)`` once per train step,
+    which walks the schedule in order (wrapping).  ``timeout``/``rng``
+    are accepted for interface parity but unused — the engine already
+    resolved the window when the schedule was built.
+    """
+
+    def __init__(self, schedule: DropSchedule, median_latency: float = 1.0):
+        self.schedule = schedule
+        self.steps_taken = 0
+        # the trainer's bounded-window emulation reads this to model the
+        # clean per-step latency (units of clean step time)
+        self.median_latency = median_latency
+
+    def drop_rate(self, timeout: float, rng) -> float:
+        p = self.schedule.rate(self.steps_taken)
+        self.steps_taken += 1
+        return p

@@ -1,6 +1,14 @@
 import os
+import sys
+
+# --scale-check needs 1024 simulated devices; everything else keeps the
+# 512-device default (REPRO_DRYRUN_DEVICES overrides).  Must be decided
+# before jax is imported.
+_N_DEV = int(os.environ.get(
+    "REPRO_DRYRUN_DEVICES",
+    1024 if "--scale-check" in sys.argv else 512))
 os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
+    f"--xla_force_host_platform_device_count={_N_DEV} "
     # CPU-only workaround: AllReducePromotion CHECK-crashes on the
     # mixed-dtype variadic all-reduces the combiner builds from bf16
     # wire + f32 count syncs (irrelevant on TPU).
@@ -25,7 +33,6 @@ the roofline benchmark to consume.
 import argparse
 import json
 import re
-import sys
 import time
 
 import jax
@@ -136,6 +143,98 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     return rec
 
 
+# ----------------------------------------------------------------------
+# Transport-coupled scale check: lower the lossy(+Hadamard) train step
+# on simulated 512- and 1024-device meshes and prove the emitted program
+# contains nothing but PLAIN collectives — the paper's §III-B claim that
+# best-effort transport changes no compiler contract: Celeris semantics
+# live entirely in elementwise masking + unbiasing around ordinary
+# psum / all_gather / all_to_all.
+# ----------------------------------------------------------------------
+
+# every collective-ish StableHLO/HLO op we could possibly emit
+_COLLECTIVE_OPS = (
+    "all_reduce", "all_gather", "all_to_all", "reduce_scatter",
+    "collective_permute", "collective_broadcast", "partition_id",
+    "replica_id", "send", "recv",
+)
+_PLAIN_COLLECTIVES = {"all_reduce", "all_gather", "all_to_all",
+                      "reduce_scatter"}
+
+
+def collective_ops_in(text: str):
+    """{op_name: count} over the collective ops present in lowered IR."""
+    out = {}
+    for op in _COLLECTIVE_OPS:
+        n = len(re.findall(rf"\b(?:stablehlo\.|mhlo\.)?{op}\b", text))
+        if n:
+            out[op] = n
+    return out
+
+
+def scale_check_cell(arch: str, n_devices: int, mode: str = "lossy_hadamard",
+                     shape_name: str = "train_4k"):
+    """Lower (no compile) one lossy train-step cell at ``n_devices``."""
+    from repro.core.transport.coupling import CollectiveMode
+
+    cfg = C.get(arch)
+    shape = SHAPES[shape_name]
+    mesh = mesh_mod.make_scale_mesh(n_devices)
+    shd.set_global_mesh(mesh)
+    t0 = time.time()
+    state = specs.abstract_state(cfg, mesh)
+    batch = specs.train_input_specs(cfg, shape, mesh)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32,
+                               sharding=jax.sharding.NamedSharding(
+                                   mesh, jax.sharding.PartitionSpec()))
+    drop = jax.ShapeDtypeStruct((), jnp.float32,
+                                sharding=jax.sharding.NamedSharding(
+                                    mesh, jax.sharding.PartitionSpec()))
+    step_fn = ts.make_train_step(
+        cfg, mesh, adamw.OptConfig(),
+        ts.CelerisConfig(mode=mode,
+                         lossy_moe=(CollectiveMode.parse(mode).lossy
+                                    and cfg.moe is not None)),
+        donate=True)
+    lowered = step_fn.lower(state, batch, key, drop)
+    t_lower = time.time() - t0
+    colls = collective_ops_in(lowered.as_text())
+    illegal = {k: v for k, v in colls.items()
+               if k not in _PLAIN_COLLECTIVES}
+    rec = {
+        "arch": arch, "shape": shape_name, "mode": mode,
+        "n_devices": n_devices,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "dp_degree": int(mesh.devices.size) // 16,
+        "lower_s": round(t_lower, 1),
+        "collective_ops": colls,
+        "illegal_collectives": illegal,
+        "ok": not illegal and "all_reduce" in colls,
+    }
+    return rec
+
+
+def scale_check(n_devices_list=(512, 1024), arch: str = "qwen2-0.5b",
+                mode: str = "lossy_hadamard"):
+    recs = []
+    for n in n_devices_list:
+        rec = scale_check_cell(arch, n, mode=mode)
+        recs.append(rec)
+        print(f"{'OK ' if rec['ok'] else 'BAD'} {arch} {mode} "
+              f"n_devices={n} mesh={rec['mesh']} "
+              f"lower={rec['lower_s']}s collectives={rec['collective_ops']}",
+              flush=True)
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"scale_check__{arch}__{mode}.json")
+    with open(path, "w") as f:
+        json.dump(recs, f, indent=1)
+    print(f"saved -> {path}")
+    if not all(r["ok"] for r in recs):
+        raise SystemExit("scale check FAILED: non-plain collectives "
+                         "in the lowered lossy train step")
+    return recs
+
+
 def run_and_save(arch, shape_name, multi_pod, celeris=True,
                  quantize_wire=False):
     rec = lower_cell(arch, shape_name, multi_pod, celeris, quantize_wire)
@@ -158,7 +257,16 @@ def main():
     ap.add_argument("--quantize-wire", action="store_true",
                     help="H6: int8 wire w/ s16 reduction")
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--scale-check", action="store_true",
+                    help="lower the lossy train step at 512 and 1024 "
+                         "simulated devices; assert plain collectives only")
+    ap.add_argument("--mode", type=str, default="lossy_hadamard",
+                    help="collective mode for --scale-check")
     args = ap.parse_args()
+
+    if args.scale_check:
+        scale_check(arch=args.arch or "qwen2-0.5b", mode=args.mode)
+        return
 
     if args.all:
         cells = []

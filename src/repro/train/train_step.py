@@ -1,31 +1,38 @@
-"""Train-step factory: GSPMD TP/SP + manual-DP Celeris gradient sync.
+"""Train-step factory: GSPMD TP/SP + transport-coupled gradient sync.
 
-Structure of one step (all inside a single jit):
+The gradient collective dispatches on
+:class:`repro.core.transport.coupling.CollectiveMode`
+(``CelerisConfig.mode``):
 
-1. **shard_map island, manual over the dp axes ('pod','data'), auto
-   (GSPMD) over 'model'** — each dp shard runs value_and_grad on its
-   local batch; tensor-parallel math inside is auto-partitioned (params
-   enter with their GSPMD 'model' shardings; in_specs only name the
-   manual dp axes, so every param spec is P() = dp-replicated).
-2. **gradient sync over dp**: either exact ``pmean`` (baseline:
-   XLA's lossless all-reduce, RoCE-like semantics) or **Celeris lossy
-   pmean** — per-leaf randomized-Hadamard encode (wire-interleaved),
-   per-(peer, wire-row) arrival masks drawn from the step's drop
-   probability (driven by the timeout controller / transport model),
-   count-unbiased decode.  The realized received fraction is returned
-   for the controller.  Sharding hint: rotation blocks ride the 'model'
-   axis so the FWHT is collective-free and nothing de-shards.
-3. optimizer update (AdamW, fp32 master, ZeRO-1-sharded state) under
-   plain GSPMD.
+- **exact** — lossless all-reduce (RoCE-like semantics).  On a mesh
+  this is pure GSPMD: the batch is dp-sharded and value_and_grad of the
+  global batch-mean loss makes the partitioner insert the all-reduces.
+- **lossy** — best-effort WITHOUT coding, the Fig.-1 ablation: wire
+  rows beyond the bounded receiver window are holes in the raw
+  gradient (:func:`_mask_grads_plain`, GSPMD-composable).
+- **lossy_hadamard** — the paper's §III-B path, a **shard_map island,
+  manual over the dp axes ('pod','data'), auto (GSPMD) over 'model'**:
+  each dp shard runs value_and_grad on its local batch, then per-leaf
+  randomized-Hadamard encode (wire-interleaved), per-(peer, wire-row)
+  arrival masks drawn from the step's drop probability (fed by the
+  transport engine through ``coupling.DropSchedule``), count-unbiased
+  decode.  The realized received fraction is returned for the timeout
+  controller.  Sharding hint: rotation blocks ride the 'model' axis so
+  the FWHT is collective-free and nothing de-shards.
 
-The factory precomputes the per-leaf Hadamard coding plans from the
-static param shapes (block counts padded to the TP degree).
+Then the optimizer update (AdamW, fp32 master, ZeRO-1-sharded state)
+under plain GSPMD.  The factory precomputes the per-leaf Hadamard
+coding plans from the static param shapes (block counts padded to the
+TP degree).
+
+The ``drop_rate`` step input is where the transport engine couples in:
+``Trainer`` walks an engine-derived ``DropSchedule`` (or the standalone
+straggler model) and feeds one scalar per step.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +42,7 @@ from repro import sharding as shd
 from repro.configs.base import ModelConfig
 from repro.core import coding
 from repro.core import lossy_collectives as lc
+from repro.core.transport.coupling import CollectiveMode
 from repro.models import model as M
 from repro.optim import adamw
 from repro.train import sharding_rules as rules
@@ -43,7 +51,13 @@ from repro.train import sharding_rules as rules
 @dataclasses.dataclass(frozen=True)
 class CelerisConfig:
     """Celeris integration knobs for training."""
-    enabled: bool = False            # lossy DP gradient sync
+    enabled: bool = False            # legacy switch: True == lossy_hadamard
+    mode: str | CollectiveMode | None = None
+                                     # "exact" | "lossy" | "lossy_hadamard";
+                                     # None defers to ``enabled``.  "lossy"
+                                     # is the uncoded ablation: dropped wire
+                                     # rows stay dropped, so the Fig.-1 A/B
+                                     # isolates what the Hadamard layer buys.
     lossy_moe: bool = False          # lossy expert-parallel All-to-All
     n_rot: int = 4096                # Hadamard rotation width
     use_pallas: bool = False         # FWHT via Pallas kernel (TPU) vs jnp
@@ -63,6 +77,12 @@ class CelerisConfig:
                                      # rotation whitens the per-row range
                                      # so one scale fits all peers).
 
+    def collective_mode(self) -> CollectiveMode:
+        if self.mode is not None:
+            return CollectiveMode.parse(self.mode)
+        return (CollectiveMode.LOSSY_HADAMARD if self.enabled
+                else CollectiveMode.EXACT)
+
 
 def _sync_grads_exact(grads, dp):
     # reduce in f32: uniform collective dtype (XLA CPU's AllReducePromotion
@@ -71,14 +91,29 @@ def _sync_grads_exact(grads, dp):
     return jax.tree.map(sync, grads), jnp.float32(1.0)
 
 
-def _sync_grads_celeris(grads, dp, plans, key, drop_rate, celeris, mesh):
+def _dp_size(dp, mesh):
+    n_dp = 1
+    for ax in dp:
+        n_dp *= mesh.shape[ax] if mesh is not None else 1
+    return n_dp
+
+
+def _leaf_mask(key, i, peer_id, n_rot, drop_rate):
+    """Per-(leaf, peer) arrival mask.  ``peer_id`` is this shard's index
+    along the dp axes, passed in explicitly: ``axis_index`` inside a
+    partially-auto shard_map lowers to a PartitionId op the SPMD
+    partitioner rejects (jax 0.4.x CPU)."""
+    k = jax.random.fold_in(jax.random.fold_in(key, 2 * i + 1), peer_id)
+    return lc.arrival_mask(k, n_rot, drop_rate)
+
+
+def _sync_grads_celeris(grads, dp, plans, key, drop_rate, celeris, mesh,
+                        peer_id):
     """Per-leaf lossy pmean with Hadamard recovery (sharding-aware ND
     form: rotation runs along each leaf's unsharded axes only, so no
     reshape ever crosses the TP sharding — see coding.encode_nd)."""
     flat, treedef = jax.tree_util.tree_flatten(grads)
-    n_dp = 1
-    for ax in dp:
-        n_dp *= mesh.shape[ax] if mesh is not None else 1
+    n_dp = _dp_size(dp, mesh)
     out, fracs = [], []
     for i, (g, plan) in enumerate(zip(flat, plans)):
         if plan is None:   # small leaf: exact sync (f32, see exact path)
@@ -87,9 +122,7 @@ def _sync_grads_celeris(grads, dp, plans, key, drop_rate, celeris, mesh):
             continue
         signs = coding.rademacher_nd(jax.random.fold_in(key, 2 * i), plan)
         tiles = coding.encode_nd(g, signs, plan)
-        mask = lc.arrival_mask(
-            lc._peer_key(jax.random.fold_in(key, 2 * i + 1), dp),
-            plan.n_rot, drop_rate)
+        mask = _leaf_mask(key, i, peer_id, plan.n_rot, drop_rate)
         contrib = tiles * mask[None, :, None].astype(tiles.dtype)
         if celeris.quantize_wire:
             # shared scale per wire row: psum-max of |contrib| so every
@@ -116,6 +149,33 @@ def _sync_grads_celeris(grads, dp, plans, key, drop_rate, celeris, mesh):
     return jax.tree_util.tree_unflatten(treedef, out), frac
 
 
+def _mask_grads_plain(grads, plans, key, drop_rate):
+    """Receiver-window loss WITHOUT coding — the Fig.-1 ablation.
+
+    One arrival mask per leaf is applied to the (already synced or
+    local) gradient: wire rows that miss the bounded window are holes in
+    the raw gradient, with no recovery — exactly the damage §III-B's
+    coding absorbs.  This is receiver-granularity loss (a late row is
+    lost from every peer at once); the per-(peer, row) form lives in the
+    Hadamard island, whose coded psum is the only shape the jax 0.4.x
+    CPU partitioner lowers under partial-auto shard_map.  Pure
+    elementwise + reshape ops, so it composes with any mesh via GSPMD.
+    """
+    flat, treedef = jax.tree_util.tree_flatten(grads)
+    out, fracs = [], []
+    for i, (g, plan) in enumerate(zip(flat, plans)):
+        if plan is None:
+            out.append(g)
+            continue
+        mask = _leaf_mask(key, i, 0, plan.n_rot, drop_rate)
+        tiles = coding.to_tiles_nd(g.astype(jnp.float32), plan)
+        masked = tiles * mask[None, :, None].astype(tiles.dtype)
+        out.append(coding.from_tiles_nd(masked, plan).astype(g.dtype))
+        fracs.append(mask.mean())
+    frac = jnp.stack(fracs).mean() if fracs else jnp.float32(1.0)
+    return jax.tree_util.tree_unflatten(treedef, out), frac
+
+
 def make_train_step(cfg: ModelConfig, mesh, opt_cfg: adamw.OptConfig,
                     celeris: Optional[CelerisConfig] = None,
                     donate: bool = True, microbatches: int = 1):
@@ -128,6 +188,7 @@ def make_train_step(cfg: ModelConfig, mesh, opt_cfg: adamw.OptConfig,
     gradient sync still happens once per step on the accumulated grads.
     """
     celeris = celeris or CelerisConfig()
+    mode = celeris.collective_mode()
     dp = shd.dp_axes(mesh)
     tp = mesh.shape.get(shd.MODEL_AXIS, 1) if mesh is not None else 1
 
@@ -140,7 +201,7 @@ def make_train_step(cfg: ModelConfig, mesh, opt_cfg: adamw.OptConfig,
 
         return jax.value_and_grad(loss_fn, has_aux=True)(params)
 
-    def island(params, batch, key, drop_rate, plans):
+    def _accum_grads(params, batch, key, drop_rate):
         if microbatches > 1:
             mb = jax.tree.map(
                 lambda a: a.reshape((microbatches,
@@ -168,12 +229,18 @@ def make_train_step(cfg: ModelConfig, mesh, opt_cfg: adamw.OptConfig,
         else:
             (loss, (nll, aux)), grads = _grads_one(params, batch, key,
                                                    drop_rate)
+        return loss, nll, aux, grads
 
-        if celeris.enabled:
-            grads, frac = _sync_grads_celeris(grads, dp, plans, key,
-                                              drop_rate, celeris, mesh)
-        else:
-            grads, frac = _sync_grads_exact(grads, dp)
+    def island(params, batch, key, drop_rate, plans, peer=None):
+        # this shard's index along the dp axes (None when no lossy sync
+        # consumes it: an unused manual-sharded input CHECK-crashes the
+        # jax 0.4.x CPU SPMD partitioner)
+        peer_id = peer[0] if peer is not None else 0
+        loss, nll, aux, grads = _accum_grads(params, batch, key, drop_rate)
+
+        grads, frac = _sync_grads_celeris(grads, dp, plans, key,
+                                          drop_rate, celeris, mesh,
+                                          peer_id)
         loss = jax.lax.pmean(loss, dp)
         nll = jax.lax.pmean(nll, dp)
         aux = jax.lax.pmean(aux, dp)
@@ -199,24 +266,47 @@ def make_train_step(cfg: ModelConfig, mesh, opt_cfg: adamw.OptConfig,
                  if l.size >= celeris.min_coded_size else None
                  for l, sp in zip(flat, flat_specs)]
 
-        if dp:
+        use_island = (dp and mode is CollectiveMode.LOSSY_HADAMARD
+                      and any(p is not None for p in plans))
+        if use_island:
             # params/grads are dp-replicated: every in/out spec is P();
-            # their 'model' shardings ride through the auto axis.
+            # their 'model' shardings ride through the auto axis.  Each
+            # shard's dp index arrives as data (P(dp)-sharded arange)
+            # because axis_index doesn't lower under partial-auto.
             rep = jax.tree.map(lambda _: P(), params)
-            fn = functools.partial(island, plans=plans)
+            fn = lambda p_, b_, k_, d_, pe_: island(
+                p_, b_, k_, d_, plans, peer=pe_)
             loss, nll, aux, grads, frac = shd.shard_map(
                 fn, mesh=mesh,
-                in_specs=(rep, rules.batch_specs(mesh, batch), P(), P()),
+                in_specs=(rep, rules.batch_specs(mesh, batch), P(), P(),
+                          P(dp)),
                 out_specs=(P(), P(), P(), rep, P()),
                 axis_names=set(dp), check_vma=False,
-            )(params, batch, key, drop_rate)
+            )(params, batch, key, drop_rate,
+              jnp.arange(_dp_size(dp, mesh), dtype=jnp.int32))
+        elif dp:
+            # Exact (and plain-lossy, and hadamard-with-nothing-to-code)
+            # collectives on a mesh need no manual island: with the
+            # batch dp-sharded, value_and_grad of the global batch-mean
+            # loss makes GSPMD insert exactly the lossless all-reduces
+            # the island's pmean would (and the jax 0.4.x CPU
+            # partitioner CHECK-crashes on a partial-auto island whose
+            # gradients cross the boundary uncoded).  Plain-lossy then
+            # applies the receiver window to the synced gradient.
+            loss, nll, aux, grads = _accum_grads(params, batch, key,
+                                                 drop_rate)
+            if mode is CollectiveMode.LOSSY:
+                grads, frac = _mask_grads_plain(grads, plans, key,
+                                                drop_rate)
+            else:
+                frac = jnp.float32(1.0)
         else:   # single-device / no-dp path
             lossy_ctx = M.LossyCtx(enabled=celeris.lossy_moe, key=key,
                                    drop_rate=drop_rate)
             (loss, (nll, aux)), grads = jax.value_and_grad(
                 lambda p: M.lm_loss(p, cfg, batch, lossy=lossy_ctx),
                 has_aux=True)(params)
-            if celeris.enabled:
+            if mode is CollectiveMode.LOSSY_HADAMARD:
                 # no dp axis to lose data across, but the node itself
                 # still receives only (1 - drop_rate) of each collective
                 # payload inside its bounded window: emulate via
@@ -228,12 +318,10 @@ def make_train_step(cfg: ModelConfig, mesh, opt_cfg: adamw.OptConfig,
                     if plan is None:
                         out.append(g)
                         continue
+                    mask = _leaf_mask(key, i, 0, plan.n_rot, drop_rate)
                     signs = coding.rademacher_nd(
                         jax.random.fold_in(key, 2 * i), plan)
                     tiles = coding.encode_nd(g, signs, plan)
-                    mask = lc.arrival_mask(
-                        jax.random.fold_in(key, 2 * i + 1),
-                        plan.n_rot, drop_rate)
                     est = coding.decode_nd(
                         tiles * mask[None, :, None].astype(tiles.dtype),
                         mask.astype(jnp.float32), signs, plan,
@@ -242,6 +330,9 @@ def make_train_step(cfg: ModelConfig, mesh, opt_cfg: adamw.OptConfig,
                     fr.append(mask.mean())
                 grads = jax.tree_util.tree_unflatten(tdef, out)
                 frac = jnp.stack(fr).mean() if fr else jnp.float32(1.0)
+            elif mode is CollectiveMode.LOSSY:
+                grads, frac = _mask_grads_plain(grads, plans, key,
+                                                drop_rate)
             else:
                 frac = jnp.float32(1.0)
 

@@ -133,7 +133,7 @@ class Trainer:
                                     "drop_rate": [], "timeout": []}
         for step in range(self.start_step, self.start_step + n_steps):
             batch = self._put_batch(step)
-            if self.celeris.enabled or self.celeris.lossy_moe:
+            if self.celeris.collective_mode().lossy or self.celeris.lossy_moe:
                 drop = self.straggler.drop_rate(self.controller.timeout,
                                                 self.rng)
             else:
