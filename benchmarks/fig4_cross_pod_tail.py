@@ -1,0 +1,144 @@
+"""Fig. 4 (beyond-paper): cross-pod tails and hierarchical recovery.
+
+The multi-pod experiment the flat Fig.-1/2 protocols cannot express:
+
+1. **Engine sweep** — DCI oversubscription x pod count on the
+   hierarchical fabric (:mod:`repro.core.transport.topology`).  Per
+   cell: Celeris round-time p99 (window fixed by the RoCE baseline on
+   the *same* fabric, paper rule) and the DCI tier's data loss.  The
+   headline is that the cross-pod (dci) tier loses strictly more than
+   the intra-pod tiers once the DCI is oversubscribed — the regime
+   where axis-split drop schedules earn their keep.
+
+2. **Hierarchical recovery** — the closed loop at topology granularity:
+   the 2-pod engine's per-tier delivered fractions become an axis-split
+   ``AxisSchedules`` (intra vs cross), and the smoke LM trains under
+   ``CollectiveMode.HIERARCHICAL`` (intra-pod sync exact, cross-pod
+   best-effort + Hadamard at the DCI drop rate).  Recovery is measured
+   against the exact baseline exactly like Fig. 1; the paper's >= 0.9
+   bar applies at its <= 5% regime.
+
+Smoke tier (CI): one 2-pod 32-node engine pass -> axis-split schedule ->
+tiny hierarchical step, ~10 s, ``smoke_fig4``-prefixed keys.
+"""
+import numpy as np
+
+import repro.configs as C
+from repro.core.transport import (NetworkParams, SimParams, coupling,
+                                  topology)
+from repro.data.pipeline import DataConfig
+from repro.optim.adamw import OptConfig
+from repro.train.train_step import CelerisConfig
+from repro.train.trainer import Trainer
+
+# engine sweep grid (full tier)
+POD_COUNTS = (2, 4, 8)
+OVERSUBS = (2.0, 4.0, 8.0)
+SWEEP_NODES = 128
+
+# recovery experiment: 2 pods at the paper's <= 5% regime (same window
+# scale fig1 uses for its "paper" regime)
+RECOVERY_PODS = 2
+RECOVERY_SCALE = 0.6
+
+# 32-node smoke fabric: same burst-rate downscale the tier-1 transport
+# tests use; the DCI tier keeps its (much busier) defaults.
+SMOKE_PARAMS = SimParams(net=NetworkParams(n_nodes=32,
+                                           burst_on_prob=0.0008))
+SMOKE_SCALE = 0.8
+
+
+def _train(cfg, steps, seed, celeris, straggler):
+    tr = Trainer(cfg, data_cfg=DataConfig(vocab_size=cfg.vocab_size,
+                                          seq_len=64, global_batch=8,
+                                          seed=1),
+                 opt_cfg=OptConfig(lr=1e-3, warmup_steps=10,
+                                   total_steps=500),
+                 celeris=celeris, seed=seed, straggler=straggler)
+    return tr.run(steps)
+
+
+def _recovery(cfg, steps, seed, sched, rows, prefix):
+    """Exact vs hierarchical training on an axis-split schedule."""
+    h_exact = _train(cfg, steps, seed, CelerisConfig(mode="exact"), None)
+    loss0 = h_exact["loss"][0]
+    final_exact = float(np.mean(h_exact["loss"][-5:]))
+    rows.append((f"{prefix}_final_loss_exact", round(final_exact, 4), None))
+
+    h_hier = _train(cfg, steps, seed,
+                    CelerisConfig(mode="hierarchical", min_coded_size=1024),
+                    coupling.HierStragglerModel(sched))
+    final_hier = float(np.mean(h_hier["loss"][-5:]))
+    rows.append((f"{prefix}_final_loss_hierarchical",
+                 round(final_hier, 4), None))
+    recovery = (loss0 - final_hier) / max(loss0 - final_exact, 1e-9)
+    rows.append((f"{prefix}_recovery", round(recovery, 4), 0.9))
+    print(f"recovery: exact {loss0:.3f} -> {final_exact:.4f}, "
+          f"hierarchical -> {final_hier:.4f}  "
+          f"(intra drop {sched.intra.mean*100:.2f}%, cross "
+          f"{sched.cross.mean*100:.2f}%)  recovery {recovery*100:5.1f}%")
+    return recovery
+
+
+def run(steps=40, seed=0, n_rounds=100, smoke=False, prefix="fig4"):
+    cfg = C.get_smoke("qwen2-0.5b")
+    rows = []
+
+    if smoke:
+        print("\n== Fig. 4 smoke: 2-pod 32-node engine -> axis-split "
+              "schedule -> hierarchical step ==")
+        p = topology.hier_params(2, base=SMOKE_PARAMS)
+        stats = topology.hier_protocol(p, n_rounds=60, seed=seed,
+                                       timeout_scale=SMOKE_SCALE)
+        cel = stats["celeris"]
+        rows.append((f"{prefix}_p99_ms_celeris", round(cel.p99 / 1e3, 2),
+                     None))
+        rows.append((f"{prefix}_dci_loss", round(cel.tier_loss("dci"), 4),
+                     None))
+        sched = coupling.split_schedule_from_round_stats(cel)
+        rows.append((f"{prefix}_drop_mean_intra",
+                     round(sched.intra.mean, 4), None))
+        rows.append((f"{prefix}_drop_mean_cross",
+                     round(sched.cross.mean, 4), None))
+        _recovery(cfg, 6, seed, sched, rows, prefix)
+        return rows
+
+    print(f"\n== Fig. 4: DCI oversubscription x pod count "
+          f"({SWEEP_NODES}-node hierarchical fabric) ==")
+    print(f"{'pods':>5s} {'oversub':>8s} {'p99 ms':>8s} {'dci loss %':>11s} "
+          f"{'intra loss %':>13s}")
+    for npods in POD_COUNTS:
+        for ov in OVERSUBS:
+            p = topology.hier_params(npods, n_nodes=SWEEP_NODES,
+                                     dci_oversubscription=ov)
+            stats = topology.hier_protocol(p, n_rounds=n_rounds, seed=seed)
+            cel = stats["celeris"]
+            intra_loss = coupling.split_schedule_from_round_stats(
+                cel).intra.mean
+            tag = f"p{npods}_o{int(ov)}"
+            rows.append((f"{prefix}_p99_ms_celeris_{tag}",
+                         round(cel.p99 / 1e3, 2), None))
+            rows.append((f"{prefix}_dci_loss_{tag}",
+                         round(cel.tier_loss("dci"), 4), None))
+            print(f"{npods:5d} {ov:8.0f} {cel.p99/1e3:8.2f} "
+                  f"{cel.tier_loss('dci')*100:11.2f} "
+                  f"{intra_loss*100:13.2f}")
+
+    print(f"\n== Fig. 4 recovery: {RECOVERY_PODS}-pod axis-split schedule "
+          f"(window x{RECOVERY_SCALE}) ==")
+    sched = coupling.split_schedule_from_engine(
+        steps, seed=seed, n_pods=RECOVERY_PODS, n_nodes=SWEEP_NODES,
+        timeout_scale=RECOVERY_SCALE)
+    rows.append((f"{prefix}_drop_mean_intra", round(sched.intra.mean, 4),
+                 None))
+    rows.append((f"{prefix}_drop_mean_cross", round(sched.cross.mean, 4),
+                 None))
+    rec = _recovery(cfg, steps, seed, sched, rows, prefix)
+    verdict = "PASS" if rec >= 0.9 else "FAIL"
+    print(f"hierarchical recovery {rec*100:.1f}% (claim: >=90%) "
+          f"-> {verdict}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

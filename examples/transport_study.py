@@ -3,13 +3,15 @@
     PYTHONPATH=src python examples/transport_study.py --rounds 300
     PYTHONPATH=src python examples/transport_study.py --sweep-timeout
     PYTHONPATH=src python examples/transport_study.py --scale-sweep
+    PYTHONPATH=src python examples/transport_study.py --multi-pod
 """
 import argparse
 
 import numpy as np
 
 from repro.core.transport import (BatchedSimParams, CollectiveSimulator,
-                                  SimParams, sweep)
+                                  SimParams, TIERS, coupling, hier_params,
+                                  hier_protocol, sweep)
 
 
 def main():
@@ -21,9 +23,32 @@ def main():
     ap.add_argument("--scale-sweep", action="store_true",
                     help="batched-engine sweep: p99 vs cluster size and "
                          "message size")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="hierarchical topology: per-tier loss and the "
+                         "axis-split drop schedule vs pod count and DCI "
+                         "oversubscription")
+    ap.add_argument("--nodes", type=int, default=128)
     args = ap.parse_args()
 
     sim = CollectiveSimulator(SimParams())
+
+    if args.multi_pod:
+        print(f"{'pods':>5s} {'oversub':>8s} {'p99 ms':>8s} "
+              + "".join(f"{'loss% ' + t:>12s}" for t in TIERS)
+              + f" {'sched intra/cross %':>20s}")
+        for npods in (2, 4, 8):
+            for ov in (2.0, 8.0):
+                p = hier_params(npods, n_nodes=args.nodes,
+                                dci_oversubscription=ov)
+                cel = hier_protocol(p, n_rounds=args.rounds,
+                                    seed=args.seed)["celeris"]
+                sched = coupling.split_schedule_from_round_stats(cel)
+                print(f"{npods:5d} {ov:8.0f} {cel.p99/1e3:8.2f} "
+                      + "".join(f"{cel.tier_loss(t)*100:12.3f}"
+                                for t in TIERS)
+                      + f" {sched.intra.mean*100:9.2f}/"
+                        f"{sched.cross.mean*100:.2f}")
+        return
 
     if args.scale_sweep:
         res = sweep(BatchedSimParams(

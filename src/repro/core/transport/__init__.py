@@ -1,18 +1,25 @@
 from repro.core.transport.params import (
-    SimParams, NetworkParams, DcqcnParams, ReliabilityParams, WorkloadParams)
+    SimParams, NetworkParams, DcqcnParams, ReliabilityParams, WorkloadParams,
+    TopologyParams)
 from repro.core.transport.engine import (
     BatchedEngine, BatchedSimParams, RoundStats, SweepResult, sweep)
 from repro.core.transport.simulator import CollectiveSimulator
 from repro.core.transport.designs import DESIGNS
+from repro.core.transport.topology import (
+    TIERS, hier_params, hier_protocol)
 from repro.core.transport.coupling import (
-    CollectiveMode, DropSchedule, EngineStragglerModel, LatencyTail,
-    closed_form_schedule, schedule_from_engine, schedule_from_round_stats)
+    AxisSchedules, CollectiveMode, DropSchedule, EngineStragglerModel,
+    HierStragglerModel, LatencyTail, closed_form_schedule,
+    schedule_from_engine, schedule_from_round_stats,
+    split_schedule_from_engine, split_schedule_from_round_stats)
 
 __all__ = [
     "SimParams", "NetworkParams", "DcqcnParams", "ReliabilityParams",
-    "WorkloadParams", "CollectiveSimulator", "RoundStats", "DESIGNS",
-    "BatchedEngine", "BatchedSimParams", "SweepResult", "sweep",
-    "CollectiveMode", "DropSchedule", "EngineStragglerModel", "LatencyTail",
-    "closed_form_schedule", "schedule_from_engine",
-    "schedule_from_round_stats",
+    "WorkloadParams", "TopologyParams", "CollectiveSimulator", "RoundStats",
+    "DESIGNS", "TIERS", "BatchedEngine", "BatchedSimParams", "SweepResult",
+    "sweep", "hier_params", "hier_protocol",
+    "AxisSchedules", "CollectiveMode", "DropSchedule", "EngineStragglerModel",
+    "HierStragglerModel", "LatencyTail", "closed_form_schedule",
+    "schedule_from_engine", "schedule_from_round_stats",
+    "split_schedule_from_engine", "split_schedule_from_round_stats",
 ]

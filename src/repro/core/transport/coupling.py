@@ -20,8 +20,16 @@ were hand-fed constants.  This module is the bridge:
 - :class:`EngineStragglerModel` — adapts a schedule to the Trainer's
   ``straggler.drop_rate(timeout, rng)`` interface (duck-typed so core
   never imports train);
-- :class:`CollectiveMode` — the exact | lossy | lossy+hadamard switch
-  the train step dispatches on.
+- :class:`CollectiveMode` — the exact | lossy | lossy+hadamard |
+  hierarchical switch the train step dispatches on.
+
+Hierarchical (multi-pod) coupling: the engine's per-tier delivered
+fractions (:mod:`repro.core.transport.topology`) split into
+:class:`AxisSchedules` — one :class:`DropSchedule` for the intra-pod
+axis (ToR + spine tiers) and one for the cross-pod DCI axis — via
+:func:`split_schedule_from_round_stats` / :func:`split_schedule_from_engine`;
+:class:`HierStragglerModel` walks the pair and feeds the trainer a
+``(2,)`` drop vector per step (``[intra, cross]``).
 """
 from __future__ import annotations
 
@@ -31,6 +39,7 @@ from math import erf, sqrt
 
 import numpy as np
 
+from repro.core.transport import topology
 from repro.core.transport.engine import BatchedEngine, RoundStats
 from repro.core.transport.params import SimParams
 
@@ -45,11 +54,17 @@ class CollectiveMode(enum.Enum):
       rescaling; see ``train_step._mask_grads_plain``);
     - ``LOSSY_HADAMARD``: best-effort + randomized-Hadamard coding, the
       paper's §III-B recovery path — per-(peer, wire-row) arrival
-      masks with count-unbiased decode, unbiased even through holes.
+      masks with count-unbiased decode, unbiased even through holes;
+    - ``HIERARCHICAL``: topology-aware split on a multi-pod mesh —
+      intra-pod gradient sync is exact (the fat in-pod fabric is
+      effectively lossless), and only the cross-pod ('pod' axis)
+      reduction takes the best-effort + Hadamard path at the DCI
+      tier's drop rate (``drop_rate[-1]`` of the per-axis vector).
     """
     EXACT = "exact"
     LOSSY = "lossy"
     LOSSY_HADAMARD = "lossy_hadamard"
+    HIERARCHICAL = "hierarchical"
 
     @classmethod
     def parse(cls, mode: "CollectiveMode | str") -> "CollectiveMode":
@@ -68,7 +83,12 @@ class CollectiveMode(enum.Enum):
 
     @property
     def coded(self) -> bool:
-        return self is CollectiveMode.LOSSY_HADAMARD
+        return self in (CollectiveMode.LOSSY_HADAMARD,
+                        CollectiveMode.HIERARCHICAL)
+
+    @property
+    def hierarchical(self) -> bool:
+        return self is CollectiveMode.HIERARCHICAL
 
 
 # ----------------------------------------------------------------------
@@ -172,6 +192,88 @@ def schedule_from_engine(n_rounds: int, seed: int = 0, *,
 
 
 # ----------------------------------------------------------------------
+# Axis-split schedules (hierarchical multi-pod topologies)
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AxisSchedules:
+    """Per-mesh-axis drop schedules for a hierarchical topology.
+
+    ``intra`` covers the in-pod fabric (ToR + spine tiers combined,
+    weighted by flow count); ``cross`` covers the DCI tier.  The trainer
+    consumes them as a ``(2,)`` vector per step (``[intra, cross]``)
+    through :class:`HierStragglerModel`.
+    """
+    intra: DropSchedule
+    cross: DropSchedule
+    source: str = ""
+
+    def rates(self, step: int) -> np.ndarray:
+        return np.array([self.intra.rate(step), self.cross.rate(step)])
+
+    # schedule-walk interface shared with DropSchedule, so the straggler
+    # adapters can hold either flavor
+    rate = rates
+
+    @property
+    def mean(self) -> tuple[float, float]:
+        return (self.intra.mean, self.cross.mean)
+
+
+def split_schedule_from_round_stats(stats: RoundStats, *,
+                                    source: str | None = None
+                                    ) -> AxisSchedules:
+    """Engine per-tier round statistics → axis-split schedules.
+
+    Tier fractions (topology.TIERS order: tor, spine, dci) combine into
+    the intra axis weighted by flow counts; empty tiers contribute
+    nothing (their fraction is reported as 1).
+    """
+    if stats.tier_recv_frac is None or stats.tier_counts is None:
+        raise ValueError(
+            "RoundStats lacks per-tier fractions — build it through "
+            "BatchedEngine.assemble (stream-replay / reference paths "
+            "don't track tiers)")
+    f = np.asarray(stats.tier_recv_frac, dtype=np.float64)
+    c = np.asarray(stats.tier_counts, dtype=np.float64)
+    w_intra = c[:2].sum()
+    if w_intra > 0:
+        intra = 1.0 - (f[:, :2] * c[:2]).sum(axis=1) / w_intra
+    else:
+        intra = np.zeros(f.shape[0])
+    cross = (1.0 - f[:, 2]) if c[2] > 0 else np.zeros(f.shape[0])
+    tag = source or f"engine:{stats.design}"
+    return AxisSchedules(
+        intra=DropSchedule(rates=intra, source=tag + ":intra"),
+        cross=DropSchedule(rates=cross, source=tag + ":cross"),
+        source=tag)
+
+
+def split_schedule_from_engine(n_rounds: int, seed: int = 0, *,
+                               params: SimParams | None = None,
+                               n_pods: int = 2,
+                               n_nodes: int | None = None,
+                               dci_oversubscription: float | None = None,
+                               timeout_scale: float = 1.0) -> AxisSchedules:
+    """Run the hierarchical engine and derive the axis-split schedule.
+
+    Same window rule as :func:`schedule_from_engine` (RoCE baseline on
+    the same fabric fixes the Celeris window at median + 1 sigma,
+    scaled), but on the multi-pod fabric, so the returned pair reflects
+    where in the hierarchy the loss actually happened.
+    """
+    p = topology.hier_params(n_pods, base=params, n_nodes=n_nodes,
+                             dci_oversubscription=dci_oversubscription)
+    stats = topology.hier_protocol(p, n_rounds, seed,
+                                   timeout_scale=timeout_scale)["celeris"]
+    tag = (f"engine:celeris n={p.net.n_nodes} pods={n_pods} seed={seed} "
+           f"scale={timeout_scale}")
+    return split_schedule_from_round_stats(stats, source=tag)
+
+
+
+
+# ----------------------------------------------------------------------
 # Closed-form alternative (no engine run needed)
 # ----------------------------------------------------------------------
 
@@ -222,7 +324,23 @@ class EngineStragglerModel:
         # clean per-step latency (units of clean step time)
         self.median_latency = median_latency
 
-    def drop_rate(self, timeout: float, rng) -> float:
+    def drop_rate(self, timeout: float, rng) -> "float | np.ndarray":
         p = self.schedule.rate(self.steps_taken)
         self.steps_taken += 1
         return p
+
+
+class HierStragglerModel(EngineStragglerModel):
+    """Feed an axis-split schedule pair into the Trainer.
+
+    Same schedule walk as :class:`EngineStragglerModel` (the
+    ``schedule.rate(step)`` interface is shared by
+    :class:`DropSchedule` and :class:`AxisSchedules`), but holding an
+    :class:`AxisSchedules`, so ``drop_rate`` returns the ``(2,)``
+    per-axis vector the hierarchical train step consumes
+    (``[intra, cross]``).
+    """
+
+    @property
+    def schedules(self) -> AxisSchedules:
+        return self.schedule

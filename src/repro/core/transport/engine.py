@@ -71,7 +71,7 @@ from typing import Dict, Sequence
 import numpy as np
 
 from repro.core import timeout as timeout_mod
-from repro.core.transport import dcqcn, designs, network, replay
+from repro.core.transport import dcqcn, designs, network, replay, topology
 from repro.core.transport.params import SimParams
 
 # Engine-native random sub-streams, all derived from the user seed.
@@ -96,6 +96,11 @@ class RoundStats:
     times_us: np.ndarray          # (rounds,)
     recv_frac: np.ndarray         # (rounds,) delivered fraction of payload
     design: str
+    # per-tier delivered fractions over the topology hierarchy
+    # (topology.TIERS order: tor, spine, dci); None on paths that don't
+    # track tiers (stream replay, the retained sequential reference)
+    tier_recv_frac: np.ndarray | None = None    # (rounds, n_tiers)
+    tier_counts: np.ndarray | None = None       # (n_tiers,) flows per tier
 
     @property
     def p50(self) -> float:
@@ -112,6 +117,16 @@ class RoundStats:
     @property
     def mean_loss(self) -> float:
         return float(1.0 - self.recv_frac.mean())
+
+    def tier_loss(self, tier: str) -> float:
+        """Mean loss on one topology tier ('tor' | 'spine' | 'dci');
+        0 when the tier is empty or untracked."""
+        if self.tier_recv_frac is None:
+            return 0.0
+        k = topology.TIERS.index(tier)
+        if self.tier_counts is not None and self.tier_counts[k] == 0:
+            return 0.0
+        return float(1.0 - self.tier_recv_frac[:, k].mean())
 
     def summary(self) -> Dict[str, float]:
         return dict(p50_us=self.p50, p99_us=self.p99, p999_us=self.p999,
@@ -134,6 +149,12 @@ class StepTrace:
     total: np.ndarray             # offered packets summed over nodes
     node_time_us: np.ndarray | None = None
     node_deliv: np.ndarray | None = None
+    # per-tier reductions over the topology hierarchy (T, n_tiers) in
+    # topology.TIERS order; ``tier_cols`` holds the static flow-column
+    # index arrays the reductions sum over
+    tier_deliv: np.ndarray | None = None
+    tier_total: np.ndarray | None = None
+    tier_cols: tuple | None = None
 
 
 class BatchedEngine:
@@ -151,12 +172,15 @@ class BatchedEngine:
             n=n, steps=2 * (n - 1),
             n_pkts=max(1, (p.work.message_bytes // n) // net.mtu_bytes),
             src=np.arange(n), dst=(np.arange(n) + 1) % n,
-            n_tors=n // net.nodes_per_tor)
+            n_tors=n // net.nodes_per_tor,
+            hier=topology.hier_geometry(net, p.topo))
         master = np.random.default_rng(seed)
         geo["fabric_seed"] = int(master.integers(2**31))
         return geo
 
-    def _new_traces(self, design_list, T, steps, n, per_node_for):
+    def _new_traces(self, design_list, T, steps, n, per_node_for,
+                    tier_cols=None):
+        track = tier_cols is not None
         out: Dict[str, StepTrace] = {}
         for d in design_list:
             keep = d in per_node_for
@@ -164,7 +188,10 @@ class BatchedEngine:
                 design=d, steps_per_round=steps,
                 nat_us=np.empty(T), deliv=np.empty(T), total=np.empty(T),
                 node_time_us=np.empty((T, n)) if keep else None,
-                node_deliv=np.empty((T, n)) if keep else None)
+                node_deliv=np.empty((T, n)) if keep else None,
+                tier_deliv=np.empty((T, topology.N_TIERS)) if track else None,
+                tier_total=np.empty((T, topology.N_TIERS)) if track else None,
+                tier_cols=tier_cols)
         return out
 
     @staticmethod
@@ -172,6 +199,10 @@ class BatchedEngine:
         tr.nat_us[sl] = time_us.max(axis=-1)
         tr.deliv[sl] = delivered.sum(axis=-1)
         tr.total[sl] = total.sum(axis=-1)
+        if tr.tier_cols is not None:
+            for k, cols in enumerate(tr.tier_cols):
+                tr.tier_deliv[sl, k] = delivered[..., cols].sum(axis=-1)
+                tr.tier_total[sl, k] = total[..., cols].sum(axis=-1)
         if tr.node_time_us is not None:
             tr.node_time_us[sl] = time_us
             tr.node_deliv[sl] = delivered
@@ -211,6 +242,13 @@ class BatchedEngine:
             raise ValueError(
                 f"ecn_threshold={net.ecn_threshold} must not exceed "
                 f"loss_knee={net.loss_knee}")
+        if self.p.topo.hierarchical and legacy_streams:
+            # legacy mode replays the flat sequential simulator's random
+            # streams; there is no pre-topology stream to replay for a
+            # multi-pod fabric
+            raise ValueError(
+                "hierarchical topologies (n_pods > 1) require "
+                "legacy_streams=False (shared-fabric mode)")
         if legacy_streams:
             return self._traces_legacy(design_list, n_rounds, seed,
                                        per_node_for)
@@ -285,11 +323,13 @@ class BatchedEngine:
         rates, _ = dcqcn.rate_trace(np.stack(channels, axis=1), p.dcqcn,
                                     dtype=np.float32)
 
-        out = self._new_traces(design_list, T, steps, n, per_node_for)
+        out = self._new_traces(design_list, T, steps, n, per_node_for,
+                               tier_cols=g["hier"].tier_cols)
         if need_clean:
             qd_clean = network.queue_delay_us(net, occ_clean32)
             avail_clean = network.avail_bandwidth(net, occ_clean32)
         full_total = np.full(T, float(n_pkts * n))
+        tier_counts = g["hier"].tier_counts
 
         if need_roce:
             rate_d = np.ascontiguousarray(rates[:, chan_idx["roce"]])
@@ -328,6 +368,8 @@ class BatchedEngine:
                 tr.nat_us[:] = t.max(axis=-1)
                 tr.deliv[:] = full_total
                 tr.total[:] = full_total
+                tr.tier_deliv[:] = n_pkts * tier_counts
+                tr.tier_total[:] = n_pkts * tier_counts
                 if tr.node_time_us is not None:
                     tr.node_time_us[:] = t
                     tr.node_deliv[:] = float(n_pkts)
@@ -342,6 +384,10 @@ class BatchedEngine:
             tr.nat_us[:] = t.max(axis=-1)
             tr.deliv[:] = full_total - cel.k.sum(axis=-1)
             tr.total[:] = full_total
+            for k_t, cols in enumerate(tr.tier_cols):
+                tr.tier_deliv[:, k_t] = (n_pkts * cols.size
+                                         - cel.k[:, cols].sum(axis=-1))
+                tr.tier_total[:, k_t] = n_pkts * cols.size
             if tr.node_time_us is not None:
                 tr.node_time_us[:] = t
                 tr.node_deliv[:] = n_pkts - cel.k
@@ -372,7 +418,21 @@ class BatchedEngine:
             occupancy=np.full(n_tors, net.idle_occupancy))
         cc_state = dcqcn.DcqcnState.init(n)
 
-        out = self._new_traces(design_list, T, steps, n, per_node_for)
+        # DCI tier (multi-pod only): its own burst process and random
+        # substreams, so the flat (n_pods=1) trace consumes exactly the
+        # streams it always did
+        hg = g["hier"]
+        hier = p.topo.hierarchical
+        if hier:
+            dci_net = topology.dci_net_params(net, p.topo)
+            dci_state = topology.init_dci_state(net, p.topo)
+            dci_fab_gen = np.random.default_rng(
+                [g["fabric_seed"], topology.STREAM_DCI_FABRIC])
+            dci_cnp_gen = np.random.default_rng(
+                [seed, topology.STREAM_DCI_CNP])
+
+        out = self._new_traces(design_list, T, steps, n, per_node_for,
+                               tier_cols=hg.tier_cols)
         for t0 in range(0, T, block_steps):
             tb = min(block_steps, T - t0)
             sl = slice(t0, t0 + tb)
@@ -382,18 +442,33 @@ class BatchedEngine:
             occ32 = network.path_occupancy_trace(
                 net, occ_tor.astype(np.float32), src, dst)
 
+            if hier:
+                u_dci = dci_fab_gen.random(
+                    (tb, network._ADVANCE_DRAWS, p.topo.n_pods))
+                _, occ_dci, dci_state = network.occupancy_trace(
+                    dci_net, u_dci, dci_state)
+                occ_eff = topology.overlay_curves(net, p.topo, hg, occ_tor,
+                                                  occ_dci, ecn_p, drop_p)
+
             cnp = np.zeros((tb, n), dtype=bool)
             cnp[hot] = cnp_gen.random((hot.size, n)) < ecn_p[hot]
+            if hier:
+                topology.dci_cnp_draws(hg, ecn_p, cnp, dci_cnp_gen)
             rate, cc_state = dcqcn.rate_trace(cnp, p.dcqcn, cc_state,
                                               dtype=np.float32)
 
             qd = network.queue_delay_us(net, occ32)
             eff_rate = rate * network.avail_bandwidth(net, occ32)
+            if hier:
+                topology.overlay_rates(net, p.topo, hg, occ_eff, rate,
+                                       occ32, qd, eff_rate)
             for d in design_list:
                 pfc = (network.pfc_pause_trace(net, occ32, pfc_gen)
                        if d == "roce" else np.zeros((tb, n), np.float32))
                 res = designs.transfer(d, n_pkts, occ32, eff_rate, drop_p,
                                        pfc, qd, rel, net, transfer_gens[d])
+                if hier:
+                    topology.add_dci_latency(p.topo, hg, res.time_us)
                 self._reduce_into(out[d], sl, res.time_us,
                                   res.delivered_pkts, res.total_pkts)
         return out
@@ -412,10 +487,25 @@ class BatchedEngine:
         total = trace.total.reshape(R, steps)
         tot_sum = np.maximum(total.sum(axis=1), 1.0)
 
+        t_deliv = t_total = tier_counts = None
+        if trace.tier_deliv is not None:
+            t_deliv = trace.tier_deliv.reshape(R, steps, -1)
+            t_total = trace.tier_total.reshape(R, steps, -1)
+            tier_counts = np.array([c.size for c in trace.tier_cols])
+
+        def tier_frac_full():
+            """(R, n_tiers) delivered fraction; empty tiers report 1."""
+            tot = t_total.sum(axis=1)
+            return np.where(tot > 0,
+                            t_deliv.sum(axis=1) / np.maximum(tot, 1.0), 1.0)
+
         if trace.design != "celeris":
             return RoundStats(times_us=nat.sum(axis=1),
                               recv_frac=deliv.sum(axis=1) / tot_sum,
-                              design=trace.design)
+                              design=trace.design,
+                              tier_recv_frac=(None if t_deliv is None
+                                              else tier_frac_full()),
+                              tier_counts=tier_counts)
 
         if window == "step" and trace.node_time_us is None:
             raise ValueError(
@@ -430,7 +520,8 @@ class BatchedEngine:
 
         if window == "round" and not adaptive:
             return self._assemble_round_window_fixed(
-                trace, nat, deliv, tot_sum, init_to * 1e6)
+                trace, nat, deliv, tot_sum, init_to * 1e6,
+                t_deliv, t_total, tier_counts)
 
         rng = np.random.default_rng([seed, _STREAM_WINDOW])
         n = self.p.net.n_nodes
@@ -438,6 +529,13 @@ class BatchedEngine:
         smoothed = np.full(n, cfg.init_timeout)
         times = np.zeros(R)
         fracs = np.ones(R)
+        t_fracs = (np.ones((R, topology.N_TIERS))
+                   if t_deliv is not None else None)
+
+        def tier_frac_round(r, got_t):
+            tot = t_total[r].sum(axis=0)
+            return np.where(tot > 0, got_t / np.maximum(tot, 1.0), 1.0)
+
         cum = np.cumsum(nat, axis=1)
         for r in range(R):
             budget_us = timeout * 1e6
@@ -448,12 +546,19 @@ class BatchedEngine:
                 late = np.clip((t_node - step_to)
                                / np.maximum(t_node, 1e-9), 0, 1)
                 times[r] = np.minimum(nat[r], step_to).sum()
-                fracs[r] = (d_node * (1 - late)).sum() / tot_sum[r]
+                got_node = d_node * (1 - late)
+                fracs[r] = got_node.sum() / tot_sum[r]
+                if t_fracs is not None:
+                    got_t = np.array([got_node[:, c].sum()
+                                      for c in trace.tier_cols])
+                    t_fracs[r] = tier_frac_round(r, got_t)
             else:
                 total_t = cum[r, -1]
                 if total_t <= budget_us:
                     times[r] = total_t
                     fracs[r] = deliv[r].sum() / tot_sum[r]
+                    if t_fracs is not None:
+                        t_fracs[r] = tier_frac_round(r, t_deliv[r].sum(0))
                 else:
                     times[r] = budget_us
                     done = cum[r] <= budget_us
@@ -462,6 +567,10 @@ class BatchedEngine:
                     part = (budget_us - prev) / max(nat[r, bidx], 1e-9)
                     got = deliv[r][done].sum() + deliv[r, bidx] * part
                     fracs[r] = got / tot_sum[r]
+                    if t_fracs is not None:
+                        got_t = ((t_deliv[r] * done[:, None]).sum(0)
+                                 + t_deliv[r, bidx] * part)
+                        t_fracs[r] = tier_frac_round(r, got_t)
             if adaptive:
                 node_frac = np.clip(
                     fracs[r] + rng.normal(0, 0.002, n), 0.0, 1.0)
@@ -469,10 +578,13 @@ class BatchedEngine:
                     smoothed, times[r] / 1e6, node_frac, cfg)
                 timeout = timeout_mod.adopt_scalar(
                     timeout_mod.coordinate(local), cfg)
-        return RoundStats(times_us=times, recv_frac=fracs, design="celeris")
+        return RoundStats(times_us=times, recv_frac=fracs, design="celeris",
+                          tier_recv_frac=t_fracs, tier_counts=tier_counts)
 
     @staticmethod
-    def _assemble_round_window_fixed(trace, nat, deliv, tot_sum, budget_us):
+    def _assemble_round_window_fixed(trace, nat, deliv, tot_sum, budget_us,
+                                     t_deliv=None, t_total=None,
+                                     tier_counts=None):
         """Fixed bounded round window, all rounds at once (paper protocol)."""
         cum = np.cumsum(nat, axis=1)
         total_t = cum[:, -1]
@@ -490,7 +602,22 @@ class BatchedEngine:
         got = ((deliv * done).sum(axis=1)
                + np.take_along_axis(deliv, bidx[:, None], axis=1)[:, 0] * part)
         fracs = np.where(over, got / tot_sum, deliv.sum(axis=1) / tot_sum)
-        return RoundStats(times_us=times, recv_frac=fracs, design="celeris")
+        t_fracs = None
+        if t_deliv is not None:
+            # same window cut, applied per tier (the truncated step's
+            # partial credit splits in proportion to each tier's share
+            # of that step's delivered packets — identical math to the
+            # scalar path)
+            R = t_deliv.shape[0]
+            got_t = ((t_deliv * done[:, :, None]).sum(axis=1)
+                     + t_deliv[np.arange(R), bidx] * part[:, None])
+            full_t = t_deliv.sum(axis=1)
+            tot_t = np.maximum(t_total.sum(axis=1), 1.0)
+            has = t_total.sum(axis=1) > 0
+            t_fracs = np.where(
+                has, np.where(over[:, None], got_t, full_t) / tot_t, 1.0)
+        return RoundStats(times_us=times, recv_frac=fracs, design="celeris",
+                          tier_recv_frac=t_fracs, tier_counts=tier_counts)
 
     # ------------------------------------------------------------------
     def run(self, design: str, n_rounds: int = 400, *,
@@ -540,11 +667,15 @@ class BatchedSimParams:
 
     Celeris windows follow the paper protocol per (config, seed): fixed
     at that seed's RoCE median + 1 sigma unless ``celeris_timeout_us``
-    pins them explicitly.
+    pins them explicitly.  ``n_pods`` adds the hierarchical-topology
+    dimension: pod counts > 1 run with the DCI overlay
+    (:mod:`repro.core.transport.topology`) configured from
+    ``base.topo``.
     """
     n_nodes: Sequence[int] = (128,)
     message_mb: Sequence[float] = (25.0,)
     seeds: Sequence[int] = (0,)
+    n_pods: Sequence[int] = (1,)
     designs: Sequence[str] = designs.DESIGNS
     n_rounds: int = 200
     celeris_timeout_us: float | None = None
@@ -554,26 +685,51 @@ class BatchedSimParams:
 
 @dataclasses.dataclass
 class SweepResult:
-    """``stats[(design, n_nodes, message_mb, seed)] -> RoundStats``."""
+    """``stats[(design, n_nodes, message_mb, seed)] -> RoundStats``.
+
+    When the grid sweeps pods (``n_pods != (1,)``) keys grow a trailing
+    pod-count element: ``(design, n_nodes, message_mb, seed, n_pods)``.
+    """
     params: BatchedSimParams
     stats: Dict[tuple, RoundStats]
 
-    def p99_vs_scale(self, design: str, message_mb: float | None = None
+    def _key(self, d, nn, mb, s, npods):
+        if tuple(self.params.n_pods) == (1,):
+            return (d, nn, mb, s)
+        return (d, nn, mb, s, npods)
+
+    def p99_vs_scale(self, design: str, message_mb: float | None = None,
+                     n_pods: int | None = None
                      ) -> Dict[int, tuple[float, float]]:
         """{n_nodes: (mean p99 over seeds, std over seeds)}."""
         mb = message_mb if message_mb is not None else self.params.message_mb[0]
+        npods = n_pods if n_pods is not None else self.params.n_pods[0]
         out = {}
         for nn in self.params.n_nodes:
-            v = [self.stats[(design, nn, mb, s)].p99
+            v = [self.stats[self._key(design, nn, mb, s, npods)].p99
                  for s in self.params.seeds]
             out[nn] = (float(np.mean(v)), float(np.std(v)))
         return out
 
+    def p99_vs_pods(self, design: str, n_nodes: int | None = None,
+                    message_mb: float | None = None
+                    ) -> Dict[int, tuple[float, float]]:
+        """{n_pods: (mean p99 over seeds, std over seeds)}."""
+        nn = n_nodes if n_nodes is not None else self.params.n_nodes[0]
+        mb = message_mb if message_mb is not None else self.params.message_mb[0]
+        out = {}
+        for npods in self.params.n_pods:
+            v = [self.stats[self._key(design, nn, mb, s, npods)].p99
+                 for s in self.params.seeds]
+            out[npods] = (float(np.mean(v)), float(np.std(v)))
+        return out
+
     def summary_rows(self):
-        """Flat (design, n_nodes, message_mb, seed, p50, p99, loss) rows."""
+        """Flat (design, n_nodes, message_mb, seed[, n_pods], p50, p99,
+        loss) rows."""
         rows = []
-        for (d, nn, mb, s), st in sorted(self.stats.items()):
-            rows.append((d, nn, mb, s, st.p50, st.p99, st.mean_loss))
+        for key, st in sorted(self.stats.items()):
+            rows.append(key + (st.p50, st.p99, st.mean_loss))
         return rows
 
 
@@ -582,35 +738,48 @@ def sweep(params: BatchedSimParams | None = None, *, progress=None
     """Run the sweep grid; designs share one physics pass per (config,
     seed).  ``progress``: optional callable(str) for liveness logging."""
     bp = params or BatchedSimParams()
+    pods_swept = tuple(bp.n_pods) != (1,)
+    if bp.legacy_streams and any(np_ > 1 for np_ in bp.n_pods):
+        # same contract as BatchedEngine.traces: there is no flat
+        # sequential stream to replay for a multi-pod fabric, and
+        # silently mixing stream modes inside one SweepResult would
+        # turn pod comparisons into stream-methodology artifacts
+        raise ValueError("legacy_streams=True is incompatible with "
+                         "n_pods > 1 sweep cells")
     stats: Dict[tuple, RoundStats] = {}
     for nn in bp.n_nodes:
         for mb in bp.message_mb:
-            p = dataclasses.replace(
-                bp.base,
-                net=dataclasses.replace(bp.base.net, n_nodes=nn),
-                work=dataclasses.replace(bp.base.work,
-                                         message_bytes=int(mb * 2**20)))
-            eng = BatchedEngine(p)
-            for s in bp.seeds:
-                if progress is not None:
-                    progress(f"n_nodes={nn} message_mb={mb} seed={s}")
-                tr = eng.traces(list(bp.designs), bp.n_rounds, s,
-                                legacy_streams=bp.legacy_streams)
-                to = bp.celeris_timeout_us
-                if "celeris" in bp.designs and to is None:
-                    if "roce" in bp.designs:
-                        base = eng.assemble(tr["roce"], s)
-                        to = float(np.percentile(base.times_us, 50)
-                                   + base.times_us.std())
-                    else:
-                        to = 50_000.0
-                for d in bp.designs:
-                    if d == "celeris":
-                        stats[(d, nn, mb, s)] = eng.assemble(
-                            tr[d], s, celeris_timeout_us=to,
-                            adaptive=False, window="round")
-                    else:
-                        stats[(d, nn, mb, s)] = eng.assemble(tr[d], s)
+            for npods in bp.n_pods:
+                p = dataclasses.replace(
+                    bp.base,
+                    net=dataclasses.replace(bp.base.net, n_nodes=nn),
+                    work=dataclasses.replace(bp.base.work,
+                                             message_bytes=int(mb * 2**20)),
+                    topo=dataclasses.replace(bp.base.topo, n_pods=npods))
+                eng = BatchedEngine(p)
+                for s in bp.seeds:
+                    if progress is not None:
+                        progress(f"n_nodes={nn} message_mb={mb} "
+                                 f"n_pods={npods} seed={s}")
+                    tr = eng.traces(list(bp.designs), bp.n_rounds, s,
+                                    legacy_streams=bp.legacy_streams)
+                    to = bp.celeris_timeout_us
+                    if "celeris" in bp.designs and to is None:
+                        if "roce" in bp.designs:
+                            base = eng.assemble(tr["roce"], s)
+                            to = float(np.percentile(base.times_us, 50)
+                                       + base.times_us.std())
+                        else:
+                            to = 50_000.0
+                    for d in bp.designs:
+                        key = ((d, nn, mb, s, npods) if pods_swept
+                               else (d, nn, mb, s))
+                        if d == "celeris":
+                            stats[key] = eng.assemble(
+                                tr[d], s, celeris_timeout_us=to,
+                                adaptive=False, window="round")
+                        else:
+                            stats[key] = eng.assemble(tr[d], s)
     return SweepResult(params=bp, stats=stats)
 
 

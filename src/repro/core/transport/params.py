@@ -52,6 +52,39 @@ class NetworkParams:
 
 
 @dataclasses.dataclass(frozen=True)
+class TopologyParams:
+    """Hierarchical multi-pod extension of the flat 2-tier Clos.
+
+    ``n_pods=1`` (the default) is the flat fabric — every code path is
+    bit-identical to the pre-topology engine.  With ``n_pods > 1`` the
+    cluster splits into contiguous pods of ``n_nodes / n_pods`` nodes;
+    ring hops that cross a pod boundary traverse a DCI (data-center
+    interconnect) uplink with its own burst process, an
+    oversubscription penalty, and extra propagation delay.  The DCI
+    tier is where the paper's best-effort transport matters most: it is
+    the contended, lossy, high-RTT hop that dominates cross-pod tails.
+    """
+    n_pods: int = 1
+    # pod egress bandwidth divisor: a 4:1 oversubscribed DCI gives each
+    # cross-pod flow 1/4 of the per-link line rate under contention
+    dci_oversubscription: float = 4.0
+    dci_rtt_us: float = 12.0            # extra one-way propagation, inter-pod
+
+    # DCI burst process: inter-pod links aggregate many jobs, so bursts
+    # are far more frequent, hotter, and the idle floor is higher than
+    # the ToR uplinks'.
+    dci_burst_on_prob: float = 0.003
+    dci_burst_off_prob: float = 0.01
+    dci_burst_occupancy_lo: float = 0.60
+    dci_burst_occupancy_hi: float = 0.97
+    dci_idle_occupancy: float = 0.10
+
+    @property
+    def hierarchical(self) -> bool:
+        return self.n_pods > 1
+
+
+@dataclasses.dataclass(frozen=True)
 class DcqcnParams:
     """DCQCN rate control (kept in hardware on all four designs)."""
     alpha_g: float = 0.00390625         # 1/256 alpha EWMA gain
@@ -84,4 +117,5 @@ class SimParams:
     dcqcn: DcqcnParams = DcqcnParams()
     rel: ReliabilityParams = ReliabilityParams()
     work: WorkloadParams = WorkloadParams()
+    topo: TopologyParams = TopologyParams()
     seed: int = 0

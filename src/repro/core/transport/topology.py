@@ -1,0 +1,235 @@
+"""Hierarchical multi-pod topology subsystem (node → ToR → spine → DCI).
+
+The flat engine models a single 2-tier Clos: every ring hop sees the
+same ToR-uplink contention process, so the trainer is fed one scalar
+drop rate per step.  Cluster-scale ML lives on a *hierarchy*: pods of a
+few hundred nodes with a fat intra-pod fabric, stitched by oversubscribed
+DCI (data-center interconnect) links whose contention, loss, and RTT
+dominate the cross-pod tail.  This module layers that hierarchy over the
+existing vectorized machinery:
+
+- :func:`hier_geometry` — static flow→tier assignment for the ring
+  (``tor`` same-ToR, ``spine`` cross-ToR intra-pod, ``dci`` cross-pod);
+- :func:`dci_net_params` — the DCI tier's burst process expressed as a
+  :class:`~repro.core.transport.params.NetworkParams` clone, so the DCI
+  occupancy trace reuses :func:`network.occupancy_trace` verbatim (same
+  closed-form Markov/EWMA math, its own random substream);
+- :func:`overlay_curves` / :func:`overlay_rates` — the per-block DCI
+  overlay the batched engine applies to cross-pod flow columns: ECN and
+  drop evaluated at the *effective* occupancy (max over traversed tiers),
+  available bandwidth divided by the oversubscription ratio, queueing
+  delay multiplied by it (the shared egress serializes pod traffic), and
+  the extra DCI propagation added to completion times;
+- :func:`hier_protocol` — the Fig.-4 protocol: RoCE baseline fixes the
+  Celeris window (paper rule) on the *same hierarchical fabric*, and
+  every design reports per-tier delivered fractions.
+
+Everything is gated on ``SimParams.topo.n_pods > 1``: at ``n_pods=1``
+the engine never calls into the overlay and never draws from the DCI
+streams, so flat seeded traces stay bit-identical to the pre-topology
+engine (pinned by ``tests/test_topology.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.transport import network
+from repro.core.transport.params import NetworkParams, SimParams, TopologyParams
+
+# Tier axis order used everywhere a per-tier quantity appears.
+TIERS = ("tor", "spine", "dci")
+N_TIERS = len(TIERS)
+
+# Engine-native random substreams for the DCI tier (disjoint from the
+# flat engine's 101-120 range so flat streams are never perturbed).
+STREAM_DCI_FABRIC = 130
+STREAM_DCI_CNP = 131
+
+
+def validate(net: NetworkParams, topo: TopologyParams) -> None:
+    if topo.n_pods < 1:
+        raise ValueError(f"n_pods={topo.n_pods} must be >= 1")
+    if net.n_nodes % topo.n_pods:
+        raise ValueError(f"n_nodes={net.n_nodes} must be a multiple of "
+                         f"n_pods={topo.n_pods}")
+    per_pod = net.n_nodes // topo.n_pods
+    if per_pod % net.nodes_per_tor:
+        raise ValueError(
+            f"nodes per pod ({per_pod}) must be a multiple of "
+            f"nodes_per_tor={net.nodes_per_tor} (pods align to ToRs)")
+    if topo.dci_oversubscription < 1.0:
+        raise ValueError("dci_oversubscription must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class HierGeometry:
+    """Static per-flow topology facts for one collective flow pattern."""
+    n_pods: int
+    pod_of: np.ndarray         # (n,) pod index per node
+    src: np.ndarray            # (n_flows,) source node per flow
+    dst: np.ndarray            # (n_flows,) destination node per flow
+    src_pod: np.ndarray        # (n_flows,) pod of each flow's source
+    dst_pod: np.ndarray        # (n_flows,) pod of each flow's destination
+    tiers: np.ndarray          # (n_flows,) tier index per flow (into TIERS)
+    tier_cols: tuple           # per tier: flow-column index array
+    cross: np.ndarray          # alias of tier_cols[2] (dci flows)
+
+    @property
+    def tier_counts(self) -> np.ndarray:
+        return np.array([c.size for c in self.tier_cols])
+
+
+def hier_geometry(net: NetworkParams, topo: TopologyParams,
+                  src: np.ndarray | None = None,
+                  dst: np.ndarray | None = None) -> HierGeometry:
+    """Tier assignment per flow (default: ring, src=i, dst=(i+1) mod n)."""
+    validate(net, topo)
+    n = net.n_nodes
+    if src is None:
+        src = np.arange(n)
+    if dst is None:
+        dst = (np.arange(n) + 1) % n
+    per_pod = n // topo.n_pods
+    pod_of = np.arange(n) // per_pod
+    ts, td = src // net.nodes_per_tor, dst // net.nodes_per_tor
+    sp, dp = pod_of[src], pod_of[dst]
+    tiers = np.where(sp != dp, 2, np.where(ts != td, 1, 0))
+    tier_cols = tuple(np.flatnonzero(tiers == k) for k in range(N_TIERS))
+    return HierGeometry(n_pods=topo.n_pods, pod_of=pod_of, src=src, dst=dst,
+                        src_pod=sp, dst_pod=dp, tiers=tiers,
+                        tier_cols=tier_cols, cross=tier_cols[2])
+
+
+def dci_net_params(net: NetworkParams, topo: TopologyParams) -> NetworkParams:
+    """The DCI burst process as a NetworkParams clone, so
+    :func:`network.occupancy_trace` drives it unchanged (one "ToR" per
+    DCI uplink)."""
+    return dataclasses.replace(
+        net,
+        burst_on_prob=topo.dci_burst_on_prob,
+        burst_off_prob=topo.dci_burst_off_prob,
+        burst_occupancy_lo=topo.dci_burst_occupancy_lo,
+        burst_occupancy_hi=topo.dci_burst_occupancy_hi,
+        idle_occupancy=topo.dci_idle_occupancy)
+
+
+def init_dci_state(net: NetworkParams, topo: TopologyParams
+                   ) -> network.FabricState:
+    return network.FabricState(
+        bursting=np.zeros(topo.n_pods, dtype=bool),
+        occupancy=np.full(topo.n_pods, topo.dci_idle_occupancy))
+
+
+def overlay_curves(net: NetworkParams, topo: TopologyParams,
+                   hg: HierGeometry, occ_tor: np.ndarray,
+                   occ_dci: np.ndarray, ecn_p: np.ndarray,
+                   drop_p: np.ndarray) -> np.ndarray:
+    """Re-evaluate ECN/drop on cross-pod columns at the effective path
+    occupancy (max over ToR uplinks *and* the two DCI uplinks traversed).
+
+    Mutates ``ecn_p``/``drop_p`` in place (cross columns only) and
+    returns the effective f64 occupancy ``(T, n_cross)`` for the rate
+    overlay.  Intra-pod columns are untouched, so the flat curves (and
+    with them the flat random-stream positions) are preserved exactly.
+    """
+    x = hg.cross
+    if x.size == 0:
+        return np.empty((occ_tor.shape[0], 0))
+    occ_path = network.path_occupancy_trace(net, occ_tor, hg.src[x],
+                                            hg.dst[x])
+    occ_pair = np.maximum(occ_dci[:, hg.src_pod[x]], occ_dci[:, hg.dst_pod[x]])
+    occ_eff = np.maximum(occ_path, occ_pair)
+    ecn_p[:, x] = network.ecn_mark_prob(net, occ_eff)
+    drop_p[:, x] = network.drop_prob(net, occ_eff)
+    return occ_eff
+
+
+def overlay_rates(net: NetworkParams, topo: TopologyParams,
+                  hg: HierGeometry, occ_eff: np.ndarray, rate: np.ndarray,
+                  occ32: np.ndarray, qd: np.ndarray,
+                  eff_rate: np.ndarray) -> None:
+    """Apply the oversubscription penalty to cross-pod columns in place.
+
+    - available bandwidth: evaluated at the effective occupancy, then
+      divided by the oversubscription ratio (pod egress is shared);
+    - queueing delay: evaluated at the effective occupancy, multiplied
+      by the ratio (the shared egress serializes pod traffic);
+    - ``occ32`` is refreshed on cross columns so RoCE's PFC pause trace
+      sees DCI congestion too.
+    """
+    x = hg.cross
+    if x.size == 0:
+        return
+    o = topo.dci_oversubscription
+    eff32 = occ_eff.astype(np.float32)
+    occ32[:, x] = eff32
+    qd[:, x] = network.queue_delay_us(net, eff32) * np.float32(o)
+    eff_rate[:, x] = (rate[:, x] * network.avail_bandwidth(net, eff32)
+                      / np.float32(o))
+
+
+def dci_cnp_draws(hg: HierGeometry, ecn_p: np.ndarray, cnp: np.ndarray,
+                  gen: np.random.Generator) -> None:
+    """Extra CNP draws for cross-pod columns (DCI marking is active even
+    when every ToR is calm, so the flat hot-row prescreen misses it).
+    Draws come from the dedicated DCI stream; the flat CNP stream's
+    consumption is untouched."""
+    x = hg.cross
+    if x.size == 0:
+        return
+    rows = np.flatnonzero(ecn_p[:, x].any(axis=1))
+    if rows.size:
+        cnp[np.ix_(rows, x)] = (gen.random((rows.size, x.size))
+                                < ecn_p[np.ix_(rows, x)])
+
+
+def add_dci_latency(topo: TopologyParams, hg: HierGeometry,
+                    time_us: np.ndarray) -> None:
+    """Extra DCI propagation (one-way) on cross-pod completion times."""
+    if hg.cross.size:
+        time_us[..., hg.cross] += np.asarray(topo.dci_rtt_us / 2.0,
+                                             dtype=time_us.dtype)
+
+
+# ----------------------------------------------------------------------
+# Protocol front-end (what fig4 and the axis-split coupling consume)
+# ----------------------------------------------------------------------
+
+def hier_params(n_pods: int, *, base: SimParams | None = None,
+                n_nodes: int | None = None,
+                dci_oversubscription: float | None = None,
+                **topo_kw) -> SimParams:
+    """A SimParams with the topology tier configured (convenience)."""
+    p = base or SimParams()
+    if n_nodes is not None:
+        p = dataclasses.replace(p, net=dataclasses.replace(
+            p.net, n_nodes=n_nodes))
+    kw = dict(n_pods=n_pods, **topo_kw)
+    if dci_oversubscription is not None:
+        kw["dci_oversubscription"] = dci_oversubscription
+    return dataclasses.replace(p, topo=dataclasses.replace(p.topo, **kw))
+
+
+def hier_protocol(params: SimParams, n_rounds: int = 200, seed: int = 0, *,
+                  timeout_scale: float = 1.0):
+    """Fig.-4 protocol on the hierarchical fabric.
+
+    Same window rule as the flat paper protocol — the RoCE baseline on
+    the *same* fabric trace fixes the Celeris window at median + 1 sigma
+    (scaled) — but run with the DCI overlay active, so the returned
+    :class:`RoundStats` carry per-tier delivered fractions.
+    Returns ``{design: RoundStats}`` for roce + celeris.
+    """
+    from repro.core.transport.engine import BatchedEngine
+
+    eng = BatchedEngine(params)
+    tr = eng.traces(["roce", "celeris"], n_rounds, seed,
+                    legacy_streams=False)
+    base = eng.assemble(tr["roce"], seed)
+    to = float((np.percentile(base.times_us, 50) + base.times_us.std())
+               * timeout_scale)
+    cel = eng.assemble(tr["celeris"], seed, celeris_timeout_us=to,
+                       adaptive=False, window="round")
+    return {"roce": base, "celeris": cel}

@@ -51,6 +51,19 @@ from repro.train import train_step as ts
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "results", "dryrun")
 
+def _serve_fn_args(cfg, shape, mesh):
+    """(jitted fn, abstract args) for a serve cell — the single lowering
+    recipe shared by lower_cell and serve_check_cell."""
+    params = specs.abstract_params(cfg, mesh)
+    if shape.kind == "prefill":
+        batch = specs.prefill_input_specs(cfg, shape, mesh)
+        return serve_step.make_prefill(cfg, shape.seq_len), (params, batch)
+    if shape.kind == "decode":
+        batch, caches, index = specs.decode_input_specs(cfg, shape, mesh)
+        return serve_step.make_decode(cfg), (params, caches, batch, index)
+    raise ValueError(f"{shape.name} is not a serve shape")
+
+
 def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                celeris: bool = True, quantize_wire: bool = False):
     cfg = C.get(arch)
@@ -86,21 +99,15 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         jax_costs = costs.trace_costs(step_fn, state, batch, key, drop)
         tokens = shape.global_batch * shape.seq_len
         model_flops = 6.0 * cfg.active_param_count() * tokens
-    elif shape.kind == "prefill":
-        params = specs.abstract_params(cfg, mesh)
-        batch = specs.prefill_input_specs(cfg, shape, mesh)
-        fn = serve_step.make_prefill(cfg, shape.seq_len)
-        lowered = fn.lower(params, batch)
-        jax_costs = costs.trace_costs(fn, params, batch)
-        tokens = shape.global_batch * shape.seq_len
-        model_flops = 2.0 * cfg.active_param_count() * tokens
-    else:   # decode
-        params = specs.abstract_params(cfg, mesh)
-        batch, caches, index = specs.decode_input_specs(cfg, shape, mesh)
-        fn = serve_step.make_decode(cfg)
-        lowered = fn.lower(params, caches, batch, index)
-        jax_costs = costs.trace_costs(fn, params, caches, batch, index)
-        model_flops = 2.0 * cfg.active_param_count() * shape.global_batch
+    else:   # prefill / decode
+        fn, args = _serve_fn_args(cfg, shape, mesh)
+        lowered = fn.lower(*args)
+        jax_costs = costs.trace_costs(fn, *args)
+        if shape.kind == "prefill":
+            tokens = shape.global_batch * shape.seq_len
+            model_flops = 2.0 * cfg.active_param_count() * tokens
+        else:
+            model_flops = 2.0 * cfg.active_param_count() * shape.global_batch
 
     t_lower = time.time() - t0
     compiled = lowered.compile()
@@ -108,6 +115,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # jax 0.4.x: list of one dict
+        cost = cost[0] if cost else None
     colls = costs.hlo_collective_bytes(compiled.as_text())
 
     n_dev = mesh.devices.size
@@ -163,10 +172,16 @@ _PLAIN_COLLECTIVES = {"all_reduce", "all_gather", "all_to_all",
 
 
 def collective_ops_in(text: str):
-    """{op_name: count} over the collective ops present in lowered IR."""
+    """{op_name: count} over the collective ops present in lowered IR.
+
+    Matches both spellings: StableHLO underscores (``all_reduce``, what
+    ``lower().as_text()`` emits) and post-SPMD HLO hyphens
+    (``all-reduce``, what ``compile().as_text()`` emits).
+    """
     out = {}
     for op in _COLLECTIVE_OPS:
-        n = len(re.findall(rf"\b(?:stablehlo\.|mhlo\.)?{op}\b", text))
+        pat = op.replace("_", "[-_]")
+        n = len(re.findall(rf"\b(?:stablehlo\.|mhlo\.)?{pat}\b", text))
         if n:
             out[op] = n
     return out
@@ -235,6 +250,76 @@ def scale_check(n_devices_list=(512, 1024), arch: str = "qwen2-0.5b",
     return recs
 
 
+# ----------------------------------------------------------------------
+# Serve-path dry run: lower prefill + decode on single- and multi-pod
+# meshes and prove the emitted programs carry nothing but plain
+# collectives — the serving analogue of --scale-check (the serve path
+# never opens a shard_map island, so any exotic op here would mean the
+# GSPMD specs leak manual collectives).
+# ----------------------------------------------------------------------
+
+def serve_check_cell(arch: str, shape_name: str, multi_pod: bool):
+    """Lower AND compile one serve cell; census the post-SPMD HLO.
+
+    Unlike the train island (whose collectives are explicit at trace
+    time), the serve path is pure GSPMD — the partitioner inserts its
+    collectives during compile, so the check must read the compiled
+    module's HLO, not the lowered StableHLO.
+    """
+    cfg = C.get(arch)
+    shape = SHAPES[shape_name]
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    shd.set_global_mesh(mesh)
+    t0 = time.time()
+    fn, args = _serve_fn_args(cfg, shape, mesh)
+    lowered = fn.lower(*args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    colls = collective_ops_in(compiled.as_text())
+    # post-SPMD HLO always contains partition-id: GSPMD addresses each
+    # device's shard via dynamic-slice(partition-id) — compiler-internal
+    # bookkeeping, not a collective.  (The train scale-check censuses
+    # pre-SPMD StableHLO, where partition_id WOULD mean a manual
+    # lowering leaked; it stays strict.)
+    benign = _PLAIN_COLLECTIVES | {"partition_id", "replica_id"}
+    illegal = {k: v for k, v in colls.items() if k not in benign}
+    return {
+        "arch": arch, "shape": shape_name, "kind": shape.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": int(mesh.devices.size),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "collective_ops": colls,
+        "illegal_collectives": illegal,
+        # TP (model-sharded matmuls) must reduce somewhere: a census
+        # with no all_reduce/reduce_scatter at all means the specs
+        # silently replicated the weights
+        "ok": not illegal and any(k in colls for k in
+                                  ("all_reduce", "reduce_scatter")),
+    }
+
+
+def serve_check(arch: str = "qwen2-0.5b",
+                shapes=("prefill_32k", "decode_32k")):
+    recs = []
+    for multi_pod in (False, True):
+        for shape_name in shapes:
+            rec = serve_check_cell(arch, shape_name, multi_pod)
+            recs.append(rec)
+            print(f"{'OK ' if rec['ok'] else 'BAD'} {arch} {shape_name:12s} "
+                  f"mesh={rec['mesh']:8s} lower={rec['lower_s']}s "
+                  f"collectives={rec['collective_ops']}", flush=True)
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"serve_check__{arch}.json")
+    with open(path, "w") as f:
+        json.dump(recs, f, indent=1)
+    print(f"saved -> {path}")
+    if not all(r["ok"] for r in recs):
+        raise SystemExit("serve check FAILED: non-plain collectives in "
+                         "the lowered serve path")
+    return recs
+
+
 def run_and_save(arch, shape_name, multi_pod, celeris=True,
                  quantize_wire=False):
     rec = lower_cell(arch, shape_name, multi_pod, celeris, quantize_wire)
@@ -260,12 +345,20 @@ def main():
     ap.add_argument("--scale-check", action="store_true",
                     help="lower the lossy train step at 512 and 1024 "
                          "simulated devices; assert plain collectives only")
+    ap.add_argument("--serve-check", action="store_true",
+                    help="lower prefill + decode on the single- and "
+                         "multi-pod production meshes; assert plain "
+                         "collectives only")
     ap.add_argument("--mode", type=str, default="lossy_hadamard",
                     help="collective mode for --scale-check")
     args = ap.parse_args()
 
     if args.scale_check:
         scale_check(arch=args.arch or "qwen2-0.5b", mode=args.mode)
+        return
+
+    if args.serve_check:
+        serve_check(arch=args.arch or "qwen2-0.5b")
         return
 
     if args.all:

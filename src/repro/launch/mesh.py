@@ -43,6 +43,21 @@ def make_host_mesh(shape=(4, 2), axes=("data", "model")) -> jax.sharding.Mesh:
     return shd.make_mesh(shape, axes)
 
 
+def make_pod_mesh(n_pods: int, data: int = 16, model: int = 16
+                  ) -> jax.sharding.Mesh:
+    """An N-pod (pod, data, model) mesh at arbitrary per-pod size.
+
+    The production shape is ``make_pod_mesh(P)`` = P x 16 x 16 (what
+    ``make_scale_mesh`` builds for 512+ devices); small ``data``/
+    ``model`` values give container-scale hierarchical test meshes,
+    e.g. ``make_pod_mesh(2, 2, 2)`` on 8 simulated devices.
+    """
+    if n_pods < 2:
+        raise ValueError(f"n_pods={n_pods}: a hierarchical mesh needs >= 2 "
+                         "pods (use make_production_mesh for one pod)")
+    return shd.make_mesh((n_pods, data, model), ("pod", "data", "model"))
+
+
 HW = {
     # TPU v5e-like hardware constants for the roofline (per chip)
     "peak_flops_bf16": 197e12,      # FLOP/s

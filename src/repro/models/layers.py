@@ -111,9 +111,9 @@ def _head_shard(x: jax.Array) -> jax.Array:
     """Constrain (B,S,H,Dh) onto the model axis over heads when legal."""
     from repro import sharding as shd
     mesh = shd.get_global_mesh()
-    if mesh is None:
+    if mesh is None or shd.MODEL_AXIS not in mesh.shape:
         return x
-    tp = mesh.shape.get(shd.MODEL_AXIS, 1)
+    tp = mesh.shape[shd.MODEL_AXIS]
     if x.ndim != 4 or x.shape[2] % tp:
         return x
     U = jax.sharding.PartitionSpec.UNCONSTRAINED
@@ -137,9 +137,10 @@ def _proj_shard(t: jax.Array, n_heads: int) -> jax.Array:
     """
     from repro import sharding as shd
     mesh = shd.get_global_mesh()
-    if mesh is None or t.ndim != 3:
+    if (mesh is None or t.ndim != 3
+            or shd.MODEL_AXIS not in mesh.shape):
         return t
-    tp = mesh.shape.get(shd.MODEL_AXIS, 1)
+    tp = mesh.shape[shd.MODEL_AXIS]
     last = shd.MODEL_AXIS if (n_heads % tp == 0
                               and t.shape[-1] % tp == 0) else None
     U = jax.sharding.PartitionSpec.UNCONSTRAINED
@@ -458,8 +459,9 @@ def unembed(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
                           cfg.logit_softcap).astype(x.dtype)
     from repro import sharding as shd
     mesh = shd.get_global_mesh()
-    if (mesh is not None and logits.ndim == 3
-            and logits.shape[-1] % mesh.shape.get(shd.MODEL_AXIS, 1) == 0):
+    if (mesh is not None and shd.MODEL_AXIS in mesh.shape
+            and logits.ndim == 3
+            and logits.shape[-1] % mesh.shape[shd.MODEL_AXIS] == 0):
         logits = jax.lax.with_sharding_constraint(
             logits, jax.sharding.NamedSharding(
                 mesh, jax.sharding.PartitionSpec(None, None, shd.MODEL_AXIS)))

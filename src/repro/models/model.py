@@ -184,8 +184,9 @@ def _apply_stack(stack: Params, cfg: ModelConfig, n_layers: int,
     from repro import sharding as shd
     mesh = shd.get_global_mesh()
     seq_pin = None
-    if (remat and mesh is not None and x.shape[1] > 1
-            and x.shape[1] % mesh.shape.get(shd.MODEL_AXIS, 1) == 0):
+    if (remat and mesh is not None and shd.MODEL_AXIS in mesh.shape
+            and x.shape[1] > 1
+            and x.shape[1] % mesh.shape[shd.MODEL_AXIS] == 0):
         nsp = jax.sharding.NamedSharding(
             mesh, jax.sharding.PartitionSpec(None, shd.MODEL_AXIS, None))
         seq_pin = lambda t: jax.lax.with_sharding_constraint(t, nsp)

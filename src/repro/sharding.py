@@ -104,3 +104,21 @@ def dp_axes(mesh: jax.sharding.Mesh | None = None) -> tuple[str, ...]:
 
 
 MODEL_AXIS = "model"
+POD_AXIS = "pod"
+
+
+# ----------------------------------------------------------------------
+# Partitioner capability gates.  The jax 0.4.x CPU SPMD partitioner
+# CHECK-crashes (hlo_sharding_util IsManualSubgroup) when raw/uncoded AD
+# gradients cross a partial-auto shard_map boundary — on 0.4.x only the
+# Hadamard-coded psum island lowers, so plain-lossy applies its receiver
+# window to the GSPMD-synced gradient (receiver granularity).  jax 0.8's
+# partitioner handles the general island, unlocking per-(peer, wire-row)
+# loss granularity for the uncoded mode too.  train_step dispatches on
+# this gate; keep every version split in this module.
+# ----------------------------------------------------------------------
+
+def plain_lossy_island_supported() -> bool:
+    """True when per-(peer,row) plain-lossy can run as a partial-auto
+    shard_map island (jax >= 0.8 partitioner)."""
+    return _shard_map_new is not None

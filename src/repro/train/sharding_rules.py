@@ -72,10 +72,12 @@ def _spec_for(path: str, shape, mesh) -> P:
                 spec.insert(0, None)
             spec = spec[:ndim]
             # divisibility guard: replicate dims the axis doesn't divide
-            # (e.g. seamless vocab 256206 % 16 != 0)
+            # (e.g. seamless vocab 256206 % 16 != 0) or that the mesh
+            # doesn't carry at all (TP-less hierarchical test meshes)
             out = []
             for s, n in zip(spec, shape):
-                if s is not None and n % mesh.shape.get(s, 1) != 0:
+                if s is not None and (s not in mesh.shape
+                                      or n % mesh.shape[s] != 0):
                     s = None
                 out.append(s)
             return P(*out)

@@ -19,6 +19,22 @@ The gradient collective dispatches on
   decode.  The realized received fraction is returned for the timeout
   controller.  Sharding hint: rotation blocks ride the 'model' axis so
   the FWHT is collective-free and nothing de-shards.
+- **hierarchical** — the multi-pod topology split: gradients first
+  reduce *exactly* over the intra-pod 'data' axis (the fat in-pod
+  fabric is effectively lossless), then the pod-mean gradients take
+  the best-effort + Hadamard path over the 'pod' axis only — arrival
+  masks are per-(pod, wire-row) at the DCI tier's drop rate.  The
+  step's ``drop_rate`` input is the ``(2,)`` axis vector
+  ``[intra, cross]`` produced by ``coupling.AxisSchedules`` /
+  ``HierStragglerModel``; the sync consumes ``drop_rate[-1]``.
+
+On jax >= 0.8 (``sharding.plain_lossy_island_supported``) the **lossy**
+mode also runs as a shard_map island with per-(peer, wire-row) masks
+applied *before* the plain psum — true sender-side loss without
+recovery.  The 0.4.x CPU partitioner CHECK-crashes on that island shape
+(only the coded psum graph survives partial-auto), so there the mode
+keeps the receiver-window fallback: masking the already-synced
+gradient.
 
 Then the optimizer update (AdamW, fp32 master, ZeRO-1-sharded state)
 under plain GSPMD.  The factory precomputes the per-leaf Hadamard
@@ -53,11 +69,15 @@ class CelerisConfig:
     """Celeris integration knobs for training."""
     enabled: bool = False            # legacy switch: True == lossy_hadamard
     mode: str | CollectiveMode | None = None
-                                     # "exact" | "lossy" | "lossy_hadamard";
-                                     # None defers to ``enabled``.  "lossy"
-                                     # is the uncoded ablation: dropped wire
-                                     # rows stay dropped, so the Fig.-1 A/B
-                                     # isolates what the Hadamard layer buys.
+                                     # "exact" | "lossy" | "lossy_hadamard"
+                                     # | "hierarchical"; None defers to
+                                     # ``enabled``.  "lossy" is the uncoded
+                                     # ablation: dropped wire rows stay
+                                     # dropped, so the Fig.-1 A/B isolates
+                                     # what the Hadamard layer buys.
+                                     # "hierarchical" needs a 'pod' mesh
+                                     # axis and a (2,) [intra, cross] drop
+                                     # input (coupling.AxisSchedules).
     lossy_moe: bool = False          # lossy expert-parallel All-to-All
     n_rot: int = 4096                # Hadamard rotation width
     use_pallas: bool = False         # FWHT via Pallas kernel (TPU) vs jnp
@@ -108,18 +128,28 @@ def _leaf_mask(key, i, peer_id, n_rot, drop_rate):
 
 
 def _sync_grads_celeris(grads, dp, plans, key, drop_rate, celeris, mesh,
-                        peer_id):
+                        peer_id, lossy_axes=None, exact_axes=()):
     """Per-leaf lossy pmean with Hadamard recovery (sharding-aware ND
     form: rotation runs along each leaf's unsharded axes only, so no
-    reshape ever crosses the TP sharding — see coding.encode_nd)."""
+    reshape ever crosses the TP sharding — see coding.encode_nd).
+
+    ``lossy_axes``/``exact_axes`` split the dp group for hierarchical
+    topologies: coded leaves first pmean *exactly* over ``exact_axes``
+    (intra-pod), then run the lossy coded psum over ``lossy_axes`` only
+    (cross-pod), with ``peer_id`` the shard's index along the lossy
+    group.  Defaults reproduce the flat behavior (whole dp lossy).
+    """
+    lossy_axes = tuple(lossy_axes) if lossy_axes is not None else tuple(dp)
     flat, treedef = jax.tree_util.tree_flatten(grads)
-    n_dp = _dp_size(dp, mesh)
+    n_lossy = _dp_size(lossy_axes, mesh)
     out, fracs = [], []
     for i, (g, plan) in enumerate(zip(flat, plans)):
         if plan is None:   # small leaf: exact sync (f32, see exact path)
             out.append(jax.lax.pmean(g.astype(jnp.float32), dp)
                        .astype(g.dtype))
             continue
+        if exact_axes:     # intra-pod reduction: exact, f32
+            g = jax.lax.pmean(g.astype(jnp.float32), exact_axes)
         signs = coding.rademacher_nd(jax.random.fold_in(key, 2 * i), plan)
         tiles = coding.encode_nd(g, signs, plan)
         mask = _leaf_mask(key, i, peer_id, plan.n_rot, drop_rate)
@@ -129,21 +159,49 @@ def _sync_grads_celeris(grads, dp, plans, key, drop_rate, celeris, mesh,
             # peer's int8 payload lives on one grid (tiny f32 pre-pass:
             # n_rot scalars per leaf)
             absmax = jax.lax.pmax(
-                jnp.max(jnp.abs(contrib), axis=(0, 2)), dp)      # (n_rot,)
+                jnp.max(jnp.abs(contrib), axis=(0, 2)), lossy_axes)
             scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
             noise = jax.random.uniform(
                 jax.random.fold_in(key, 3 * i + 2), contrib.shape)
             q = jnp.clip(jnp.floor(contrib / scale[None, :, None] + noise),
                          -127, 127).astype(jnp.int16)
-            tiles_sum = (jax.lax.psum(q, dp).astype(jnp.float32)
+            tiles_sum = (jax.lax.psum(q, lossy_axes).astype(jnp.float32)
                          * scale[None, :, None])
         else:
             contrib = contrib.astype(jnp.dtype(celeris.wire_dtype))
-            tiles_sum = jax.lax.psum(contrib, dp).astype(jnp.float32)
-        counts = jax.lax.psum(mask.astype(jnp.float32), dp)
+            tiles_sum = jax.lax.psum(contrib, lossy_axes).astype(jnp.float32)
+        counts = jax.lax.psum(mask.astype(jnp.float32), lossy_axes)
         est = coding.decode_nd(tiles_sum, counts, signs, plan,
-                               total_peers=n_dp)
-        out.append((est / n_dp).astype(g.dtype))
+                               total_peers=n_lossy)
+        out.append((est / n_lossy).astype(g.dtype))
+        fracs.append(jnp.sum(counts) / (n_lossy * plan.n_rot))
+    frac = jnp.stack(fracs).mean() if fracs else jnp.float32(1.0)
+    return jax.tree_util.tree_unflatten(treedef, out), frac
+
+
+def _sync_grads_plain_island(grads, dp, plans, key, drop_rate, mesh,
+                             peer_id):
+    """Per-(peer, wire-row) loss WITHOUT coding, inside the island
+    (jax >= 0.8 only — see ``sharding.plain_lossy_island_supported``):
+    each peer masks its own contribution *before* the plain psum, so a
+    dropped row is missing from that peer only, with no recovery and no
+    rescaling — the uncoded sender-side ablation the 0.4.x partitioner
+    can't lower."""
+    flat, treedef = jax.tree_util.tree_flatten(grads)
+    n_dp = _dp_size(dp, mesh)
+    out, fracs = [], []
+    for i, (g, plan) in enumerate(zip(flat, plans)):
+        if plan is None:
+            out.append(jax.lax.pmean(g.astype(jnp.float32), dp)
+                       .astype(g.dtype))
+            continue
+        tiles = coding.to_tiles_nd(g.astype(jnp.float32), plan)
+        mask = _leaf_mask(key, i, peer_id, plan.n_rot, drop_rate)
+        masked = tiles * mask[None, :, None].astype(tiles.dtype)
+        tiles_sum = jax.lax.psum(masked, dp)
+        counts = jax.lax.psum(mask.astype(jnp.float32), dp)
+        out.append(coding.from_tiles_nd(tiles_sum / n_dp, plan)
+                   .astype(g.dtype))
         fracs.append(jnp.sum(counts) / (n_dp * plan.n_rot))
     frac = jnp.stack(fracs).mean() if fracs else jnp.float32(1.0)
     return jax.tree_util.tree_unflatten(treedef, out), frac
@@ -191,10 +249,19 @@ def make_train_step(cfg: ModelConfig, mesh, opt_cfg: adamw.OptConfig,
     mode = celeris.collective_mode()
     dp = shd.dp_axes(mesh)
     tp = mesh.shape.get(shd.MODEL_AXIS, 1) if mesh is not None else 1
+    if mode is CollectiveMode.HIERARCHICAL and dp and shd.POD_AXIS not in dp:
+        raise ValueError(
+            "hierarchical collective mode needs a 'pod' mesh axis "
+            "(launch.mesh.make_pod_mesh / make_scale_mesh >= 512); "
+            f"got dp axes {dp}")
 
     def _grads_one(params, batch, key, drop_rate):
+        # the MoE all-to-all coin expects one scalar; hierarchical mode
+        # feeds a (2,) [intra, cross] vector — expert exchange crosses
+        # pods, so it takes the cross component
+        moe_rate = jnp.reshape(drop_rate, (-1,))[-1]
         lossy_ctx = M.LossyCtx(enabled=celeris.lossy_moe, key=key,
-                               drop_rate=drop_rate)
+                               drop_rate=moe_rate)
 
         def loss_fn(p):
             return M.lm_loss(p, cfg, batch, lossy=lossy_ctx)
@@ -231,6 +298,9 @@ def make_train_step(cfg: ModelConfig, mesh, opt_cfg: adamw.OptConfig,
                                                    drop_rate)
         return loss, nll, aux, grads
 
+    pod_axes = tuple(a for a in dp if a == shd.POD_AXIS)
+    data_axes = tuple(a for a in dp if a != shd.POD_AXIS)
+
     def island(params, batch, key, drop_rate, plans, peer=None):
         # this shard's index along the dp axes (None when no lossy sync
         # consumes it: an unused manual-sharded input CHECK-crashes the
@@ -238,9 +308,24 @@ def make_train_step(cfg: ModelConfig, mesh, opt_cfg: adamw.OptConfig,
         peer_id = peer[0] if peer is not None else 0
         loss, nll, aux, grads = _accum_grads(params, batch, key, drop_rate)
 
-        grads, frac = _sync_grads_celeris(grads, dp, plans, key,
-                                          drop_rate, celeris, mesh,
-                                          peer_id)
+        if mode is CollectiveMode.HIERARCHICAL:
+            # intra-pod exact, cross-pod coded-lossy: every data shard
+            # in a pod shares the pod's wire, so the mask peer is the
+            # pod index and the drop is the cross-pod (DCI) component
+            # of the [intra, cross] axis vector (scalar inputs work
+            # too: reshape(-1)[-1] is the scalar itself)
+            pod_id = peer_id // _dp_size(data_axes, mesh)
+            cross = jnp.reshape(drop_rate, (-1,))[-1]
+            grads, frac = _sync_grads_celeris(
+                grads, dp, plans, key, cross, celeris, mesh, pod_id,
+                lossy_axes=pod_axes, exact_axes=data_axes)
+        elif mode is CollectiveMode.LOSSY:
+            grads, frac = _sync_grads_plain_island(grads, dp, plans, key,
+                                                   drop_rate, mesh, peer_id)
+        else:
+            grads, frac = _sync_grads_celeris(grads, dp, plans, key,
+                                              drop_rate, celeris, mesh,
+                                              peer_id)
         loss = jax.lax.pmean(loss, dp)
         nll = jax.lax.pmean(nll, dp)
         aux = jax.lax.pmean(aux, dp)
@@ -266,7 +351,15 @@ def make_train_step(cfg: ModelConfig, mesh, opt_cfg: adamw.OptConfig,
                  if l.size >= celeris.min_coded_size else None
                  for l, sp in zip(flat, flat_specs)]
 
-        use_island = (dp and mode is CollectiveMode.LOSSY_HADAMARD
+        island_modes = {CollectiveMode.LOSSY_HADAMARD}
+        if pod_axes:
+            island_modes.add(CollectiveMode.HIERARCHICAL)
+        if shd.plain_lossy_island_supported():
+            # jax >= 0.8: the uncoded island lowers too, unlocking
+            # per-(peer,row) plain-lossy (0.4.x keeps the post-sync
+            # receiver-window fallback below)
+            island_modes.add(CollectiveMode.LOSSY)
+        use_island = (dp and mode in island_modes
                       and any(p is not None for p in plans))
         if use_island:
             # params/grads are dp-replicated: every in/out spec is P();
@@ -302,23 +395,27 @@ def make_train_step(cfg: ModelConfig, mesh, opt_cfg: adamw.OptConfig,
                 frac = jnp.float32(1.0)
         else:   # single-device / no-dp path
             lossy_ctx = M.LossyCtx(enabled=celeris.lossy_moe, key=key,
-                                   drop_rate=drop_rate)
+                                   drop_rate=jnp.reshape(drop_rate,
+                                                         (-1,))[-1])
             (loss, (nll, aux)), grads = jax.value_and_grad(
                 lambda p: M.lm_loss(p, cfg, batch, lossy=lossy_ctx),
                 has_aux=True)(params)
-            if mode is CollectiveMode.LOSSY_HADAMARD:
+            if mode.coded:
                 # no dp axis to lose data across, but the node itself
                 # still receives only (1 - drop_rate) of each collective
                 # payload inside its bounded window: emulate via
                 # single-peer encode -> mask -> unbiased decode (this is
                 # what the Fig.-1 loss-tolerance benchmark measures).
+                # Hierarchical mode loses only on the cross-pod axis, so
+                # its emulation rate is the vector's cross component.
+                rate = jnp.reshape(drop_rate, (-1,))[-1]
                 flat, tdef = jax.tree_util.tree_flatten(grads)
                 out, fr = [], []
                 for i, (g, plan) in enumerate(zip(flat, plans)):
                     if plan is None:
                         out.append(g)
                         continue
-                    mask = _leaf_mask(key, i, 0, plan.n_rot, drop_rate)
+                    mask = _leaf_mask(key, i, 0, plan.n_rot, rate)
                     signs = coding.rademacher_nd(
                         jax.random.fold_in(key, 2 * i), plan)
                     tiles = coding.encode_nd(g, signs, plan)

@@ -134,6 +134,10 @@ class Trainer:
         for step in range(self.start_step, self.start_step + n_steps):
             batch = self._put_batch(step)
             if self.celeris.collective_mode().lossy or self.celeris.lossy_moe:
+                # scalar for the flat modes; a (2,) [intra, cross] axis
+                # vector when a HierStragglerModel drives hierarchical
+                # mode (the step consumes whichever shape it was traced
+                # with)
                 drop = self.straggler.drop_rate(self.controller.timeout,
                                                 self.rng)
             else:
@@ -141,7 +145,7 @@ class Trainer:
             t0 = time.perf_counter()
             self.state, metrics = self.step_fn(
                 self.state, batch, jax.random.fold_in(self.key, step),
-                jnp.float32(drop))
+                jnp.asarray(drop, dtype=jnp.float32))
             metrics = {k: float(v) for k, v in metrics.items()}
             wall = time.perf_counter() - t0
 

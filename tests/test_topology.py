@@ -1,0 +1,257 @@
+"""Hierarchical multi-pod topology subsystem (ISSUE 3 acceptance tests).
+
+- flat (n_pods=1) runs are bit-compatible with the pre-topology engine:
+  the DCI tier must never perturb flat traces, whatever its parameters;
+- per-tier delivered fractions are consistent with the scalar fraction
+  and ordered (cross-pod <= intra-pod under DCI oversubscription);
+- the axis-split coupling reproduces engine tier output exactly;
+- the hierarchical collective mode round-trips on a real 8-device
+  (pod, data) mesh, and (slow) lowers at 512 simulated devices with
+  plain collectives only.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.transport import (BatchedEngine, BatchedSimParams,
+                                  NetworkParams, SimParams, TopologyParams,
+                                  coupling, sweep, topology)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SMALL = SimParams(net=NetworkParams(n_nodes=32, burst_on_prob=0.0008))
+
+
+def _run(code: str, devices: int = 8, timeout: int = 420):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    return r.stdout
+
+
+# --------------------------------------------------- n_pods=1 bit-compat
+
+def test_flat_traces_immune_to_dci_params():
+    """A 1-pod topology with arbitrarily hostile DCI parameters must
+    reproduce the default engine bit-exactly: the DCI tier may not
+    consume fabric randomness or touch any flow column when no flow
+    crosses a pod boundary."""
+    hostile = TopologyParams(n_pods=1, dci_oversubscription=64.0,
+                             dci_burst_on_prob=0.5, dci_idle_occupancy=0.9,
+                             dci_rtt_us=1e6)
+    base = BatchedEngine(SMALL)
+    mod = BatchedEngine(dataclasses.replace(SMALL, topo=hostile))
+    for legacy in (False, True):
+        tb = base.traces(["roce", "celeris"], 30, seed=7,
+                         legacy_streams=legacy)
+        tm = mod.traces(["roce", "celeris"], 30, seed=7,
+                        legacy_streams=legacy)
+        for d in ("roce", "celeris"):
+            np.testing.assert_array_equal(tb[d].nat_us, tm[d].nat_us)
+            np.testing.assert_array_equal(tb[d].deliv, tm[d].deliv)
+            np.testing.assert_array_equal(tb[d].tier_deliv,
+                                          tm[d].tier_deliv)
+
+
+def test_flat_round_stats_match_seeded_engine():
+    """RoundStats through the topology-aware assemble equal the seeded
+    engine's scalar stats, and the new tier axis is self-consistent:
+    tier fractions recombine (delivered-weighted) into recv_frac."""
+    eng = BatchedEngine(SMALL)
+    tr = eng.traces(["roce", "celeris"], 50, seed=3, legacy_streams=False)
+    base = eng.assemble(tr["roce"], 3)
+    to = float(np.percentile(base.times_us, 50) + base.times_us.std()) * 0.8
+    for st in (base, eng.assemble(tr["celeris"], 3, celeris_timeout_us=to,
+                                  adaptive=False, window="round")):
+        assert st.tier_recv_frac is not None
+        assert st.tier_counts.sum() == SMALL.net.n_nodes
+        assert st.tier_counts[2] == 0          # no cross-pod flows flat
+        # empty tiers report fraction 1 (nothing to lose)
+        np.testing.assert_array_equal(st.tier_recv_frac[:, 2], 1.0)
+    # tier consistency on the windowed celeris stats: per-round payload
+    # recombines because tiers partition the flows
+    cel = eng.assemble(tr["celeris"], 3, celeris_timeout_us=to,
+                       adaptive=False, window="round")
+    steps = tr["celeris"].steps_per_round
+    t_total = tr["celeris"].tier_total.reshape(-1, steps, 3).sum(axis=1)
+    recombined = ((cel.tier_recv_frac * t_total).sum(axis=1)
+                  / np.maximum(t_total.sum(axis=1), 1.0))
+    np.testing.assert_allclose(recombined, cel.recv_frac, atol=1e-9)
+
+
+def test_hier_requires_shared_mode_and_valid_geometry():
+    hp = topology.hier_params(2, base=SMALL)
+    with pytest.raises(ValueError, match="legacy_streams"):
+        BatchedEngine(hp).traces(["celeris"], 5, 0, legacy_streams=True)
+    with pytest.raises(ValueError, match="multiple"):
+        topology.validate(NetworkParams(n_nodes=48), TopologyParams(n_pods=5))
+    with pytest.raises(ValueError, match="oversubscription"):
+        topology.validate(NetworkParams(),
+                          TopologyParams(n_pods=2,
+                                         dci_oversubscription=0.5))
+
+
+# --------------------------------------------------- per-tier sanity
+
+def test_cross_pod_delivers_no_more_than_intra():
+    """Under an oversubscribed, busier DCI the cross-pod tier's mean
+    delivered fraction must not exceed the intra-pod tiers'."""
+    hp = topology.hier_params(2, base=SMALL, dci_oversubscription=8.0)
+    cel = topology.hier_protocol(hp, n_rounds=80, seed=0,
+                                 timeout_scale=0.8)["celeris"]
+    sched = coupling.split_schedule_from_round_stats(cel)
+    assert sched.cross.mean >= sched.intra.mean
+    assert sched.cross.mean > 0.0
+    # the dci tier itself is the lossiest of the three
+    assert cel.tier_loss("dci") >= cel.tier_loss("tor")
+    assert cel.tier_loss("dci") >= cel.tier_loss("spine")
+
+
+def test_dci_oversubscription_inflates_cross_pod_tail():
+    p99 = {}
+    for ov in (1.0, 8.0):
+        hp = topology.hier_params(2, base=SMALL, dci_oversubscription=ov)
+        p99[ov] = topology.hier_protocol(hp, n_rounds=60,
+                                         seed=0)["roce"].p99
+    assert p99[8.0] > 1.5 * p99[1.0]
+
+
+def test_sweep_pod_dimension():
+    common = dict(n_nodes=(32,), message_mb=(4.0,), seeds=(0,),
+                  designs=("roce", "celeris"), n_rounds=20, base=SMALL)
+    flat = sweep(BatchedSimParams(**common))
+    assert ("celeris", 32, 4.0, 0) in flat.stats      # legacy 4-keys
+    res = sweep(BatchedSimParams(n_pods=(1, 2), **common))
+    assert ("celeris", 32, 4.0, 0, 2) in res.stats    # pod-keyed
+    pods = res.p99_vs_pods("celeris")
+    assert set(pods) == {1, 2} and pods[2][0] > 0
+    # the 1-pod cell of a pod sweep matches the flat sweep bit-exactly
+    np.testing.assert_array_equal(
+        res.stats[("celeris", 32, 4.0, 0, 1)].times_us,
+        flat.stats[("celeris", 32, 4.0, 0)].times_us)
+
+
+# --------------------------------------------- axis-split schedule parity
+
+def test_split_schedule_matches_engine_tiers():
+    """coupling must not distort the engine's tier output: cross rate at
+    step i == 1 - dci recv_frac of round i (clipped), intra == the
+    count-weighted tor+spine combination."""
+    hp = topology.hier_params(2, base=SMALL, dci_oversubscription=8.0)
+    cel = topology.hier_protocol(hp, n_rounds=40, seed=5,
+                                 timeout_scale=0.8)["celeris"]
+    sched = coupling.split_schedule_from_engine(
+        40, seed=5, params=SMALL, n_pods=2, dci_oversubscription=8.0,
+        timeout_scale=0.8)
+    np.testing.assert_allclose(
+        sched.cross.rates,
+        np.clip(1.0 - cel.tier_recv_frac[:, 2], 0, coupling.MAX_DROP),
+        atol=1e-12)
+    c = cel.tier_counts.astype(float)
+    want_intra = 1.0 - ((cel.tier_recv_frac[:, :2] * c[:2]).sum(axis=1)
+                        / c[:2].sum())
+    np.testing.assert_allclose(
+        sched.intra.rates, np.clip(want_intra, 0, coupling.MAX_DROP),
+        atol=1e-12)
+
+    # the trainer adapter walks both axes in lockstep
+    m = coupling.HierStragglerModel(sched)
+    v0 = m.drop_rate(2.0, None)
+    assert v0.shape == (2,)
+    assert v0[0] == pytest.approx(sched.intra.rate(0))
+    assert v0[1] == pytest.approx(sched.cross.rate(0))
+    assert m.drop_rate(2.0, None)[1] == pytest.approx(sched.cross.rate(1))
+
+
+def test_split_schedule_requires_tier_stats():
+    from repro.core.transport.engine import RoundStats
+    bare = RoundStats(times_us=np.ones(3), recv_frac=np.ones(3),
+                      design="celeris")
+    with pytest.raises(ValueError, match="tier"):
+        coupling.split_schedule_from_round_stats(bare)
+
+
+# ------------------------------------- hierarchical mode (8-device mesh)
+
+def test_hierarchical_mode_roundtrip_8dev():
+    """Full train step under CollectiveMode.HIERARCHICAL on a 2-pod x
+    4-data mesh: zero cross-drop is exact (recv_frac 1, same first-step
+    loss as exact mode), and at an engine-style cross rate the realized
+    received fraction tracks 1 - drop."""
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        import repro.configs as C
+        from repro import sharding as shd
+        from repro.data.pipeline import DataConfig, make_source
+        from repro.optim.adamw import OptConfig
+        from repro.train import train_step as ts, sharding_rules as rules
+        mesh = shd.make_mesh((2, 4), ('pod', 'data'))
+        shd.set_global_mesh(mesh)
+        cfg = C.get_smoke('qwen2-0.5b')
+        src = make_source(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                     global_batch=8, seed=1))
+        host = src.global_batch(0, 8)
+        sp = rules.batch_specs(mesh, host)
+        batch = {k: jax.device_put(
+                     v, jax.sharding.NamedSharding(mesh, sp[k]))
+                 for k, v in host.items()}
+
+        def step_with(mode, drop):
+            fn = ts.make_train_step(cfg, mesh, OptConfig(lr=1e-3),
+                                    ts.CelerisConfig(mode=mode,
+                                                     min_coded_size=1024))
+            st = ts.init_state(jax.random.PRNGKey(0), cfg)
+            st = jax.device_put(st, ts.state_shardings(st, mesh))
+            st, m = fn(st, batch, jax.random.PRNGKey(1),
+                       jnp.asarray(drop, jnp.float32))
+            return {k: float(v) for k, v in m.items()}
+
+        m_ex = step_with('exact', 0.0)
+        m_h0 = step_with('hierarchical', [0.0, 0.0])
+        assert m_h0['recv_frac'] == 1.0, m_h0
+        assert abs(m_h0['loss'] - m_ex['loss']) < 1e-4, (m_ex, m_h0)
+        m_hd = step_with('hierarchical', [0.0, 0.2])
+        assert abs(m_hd['recv_frac'] - 0.8) < 0.05, m_hd
+        assert np.isfinite(m_hd['loss'])
+        print('OK')
+    """)
+
+
+def test_hierarchical_mode_needs_pod_axis():
+    from repro.optim.adamw import OptConfig
+    from repro.train import train_step as ts
+    import repro.configs as C
+
+    class FakeMesh:      # axis introspection only; never traced
+        axis_names = ("data", "model")
+        shape = {"data": 4, "model": 2}
+
+    with pytest.raises(ValueError, match="pod"):
+        ts.make_train_step(C.get_smoke("qwen2-0.5b"), FakeMesh(),
+                           OptConfig(),
+                           ts.CelerisConfig(mode="hierarchical"))
+
+
+@pytest.mark.slow
+def test_scale_check_512_hierarchical_lowers_plain_collectives():
+    """dryrun scale check with mode=hierarchical at 512 devices: the
+    intra-exact + cross-coded island lowers to plain collectives."""
+    out = _run("""
+        from repro.launch import dryrun
+        rec = dryrun.scale_check_cell('qwen2-0.5b', 512,
+                                      mode='hierarchical')
+        assert rec['ok'], rec
+        assert rec['illegal_collectives'] == {}, rec
+        assert 'all_reduce' in rec['collective_ops'], rec
+        print('OK')
+    """, devices=512, timeout=560)
+    assert "OK" in out
