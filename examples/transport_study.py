@@ -27,19 +27,26 @@ def main():
                     help="hierarchical topology: per-tier loss and the "
                          "axis-split drop schedule vs pod count and DCI "
                          "oversubscription")
+    ap.add_argument("--schedule", choices=("ring", "hier"), default="ring",
+                    help="collective schedule riding the fabric in "
+                         "--multi-pod: flat ring vs hierarchical "
+                         "RS/AG + DCI leader exchange "
+                         "(core/transport/schedule.py)")
     ap.add_argument("--nodes", type=int, default=128)
     args = ap.parse_args()
 
     sim = CollectiveSimulator(SimParams())
 
     if args.multi_pod:
+        print(f"schedule={args.schedule}")
         print(f"{'pods':>5s} {'oversub':>8s} {'p99 ms':>8s} "
               + "".join(f"{'loss% ' + t:>12s}" for t in TIERS)
               + f" {'sched intra/cross %':>20s}")
         for npods in (2, 4, 8):
             for ov in (2.0, 8.0):
                 p = hier_params(npods, n_nodes=args.nodes,
-                                dci_oversubscription=ov)
+                                dci_oversubscription=ov,
+                                schedule=args.schedule)
                 cel = hier_protocol(p, n_rounds=args.rounds,
                                     seed=args.seed)["celeris"]
                 sched = coupling.split_schedule_from_round_stats(cel)

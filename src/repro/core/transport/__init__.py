@@ -7,6 +7,9 @@ from repro.core.transport.simulator import CollectiveSimulator
 from repro.core.transport.designs import DESIGNS
 from repro.core.transport.topology import (
     TIERS, hier_params, hier_protocol)
+from repro.core.transport.schedule import (
+    SCHEDULES, CollectiveSchedule, HierarchicalSchedule, RingSchedule,
+    SchedulePhase, SchedulePlan, get_schedule, make_plan)
 from repro.core.transport.coupling import (
     AxisSchedules, CollectiveMode, DropSchedule, EngineStragglerModel,
     HierStragglerModel, LatencyTail, closed_form_schedule,
@@ -18,6 +21,9 @@ __all__ = [
     "WorkloadParams", "TopologyParams", "CollectiveSimulator", "RoundStats",
     "DESIGNS", "TIERS", "BatchedEngine", "BatchedSimParams", "SweepResult",
     "sweep", "hier_params", "hier_protocol",
+    "SCHEDULES", "CollectiveSchedule", "HierarchicalSchedule",
+    "RingSchedule", "SchedulePhase", "SchedulePlan", "get_schedule",
+    "make_plan",
     "AxisSchedules", "CollectiveMode", "DropSchedule", "EngineStragglerModel",
     "HierStragglerModel", "LatencyTail", "closed_form_schedule",
     "schedule_from_engine", "schedule_from_round_stats",

@@ -226,8 +226,13 @@ def split_schedule_from_round_stats(stats: RoundStats, *,
     """Engine per-tier round statistics → axis-split schedules.
 
     Tier fractions (topology.TIERS order: tor, spine, dci) combine into
-    the intra axis weighted by flow counts; empty tiers contribute
-    nothing (their fraction is reported as 1).
+    the intra axis weighted by the collective schedule's actual
+    per-tier exposure — ``stats.tier_pkts``, the offered packets per
+    round per tier from the schedule plan's step→tier map (steps ×
+    flows × packets), so e.g. a hierarchical plan's two all-node intra
+    phases weigh tor/spine by what they really carried.  Older stats
+    without ``tier_pkts`` fall back to the static flow-count heuristic.
+    Empty tiers contribute nothing (their fraction is reported as 1).
     """
     if stats.tier_recv_frac is None or stats.tier_counts is None:
         raise ValueError(
@@ -235,13 +240,14 @@ def split_schedule_from_round_stats(stats: RoundStats, *,
             "BatchedEngine.assemble (stream-replay / reference paths "
             "don't track tiers)")
     f = np.asarray(stats.tier_recv_frac, dtype=np.float64)
-    c = np.asarray(stats.tier_counts, dtype=np.float64)
-    w_intra = c[:2].sum()
+    w = np.asarray(stats.tier_pkts if stats.tier_pkts is not None
+                   else stats.tier_counts, dtype=np.float64)
+    w_intra = w[:2].sum()
     if w_intra > 0:
-        intra = 1.0 - (f[:, :2] * c[:2]).sum(axis=1) / w_intra
+        intra = 1.0 - (f[:, :2] * w[:2]).sum(axis=1) / w_intra
     else:
         intra = np.zeros(f.shape[0])
-    cross = (1.0 - f[:, 2]) if c[2] > 0 else np.zeros(f.shape[0])
+    cross = (1.0 - f[:, 2]) if w[2] > 0 else np.zeros(f.shape[0])
     tag = source or f"engine:{stats.design}"
     return AxisSchedules(
         intra=DropSchedule(rates=intra, source=tag + ":intra"),
@@ -253,21 +259,27 @@ def split_schedule_from_engine(n_rounds: int, seed: int = 0, *,
                                params: SimParams | None = None,
                                n_pods: int = 2,
                                n_nodes: int | None = None,
-                               dci_oversubscription: float | None = None,
+                               dci_oversubscription: "float | tuple | None"
+                               = None,
+                               schedule: str | None = None,
                                timeout_scale: float = 1.0) -> AxisSchedules:
     """Run the hierarchical engine and derive the axis-split schedule.
 
     Same window rule as :func:`schedule_from_engine` (RoCE baseline on
     the same fabric fixes the Celeris window at median + 1 sigma,
     scaled), but on the multi-pod fabric, so the returned pair reflects
-    where in the hierarchy the loss actually happened.
+    where in the hierarchy the loss actually happened.  ``schedule``
+    selects the collective schedule riding that fabric ("ring" |
+    "hier"): with "hier" the cross axis reflects the DCI leader
+    exchange's big shards rather than per-hop ring slices.
     """
     p = topology.hier_params(n_pods, base=params, n_nodes=n_nodes,
-                             dci_oversubscription=dci_oversubscription)
+                             dci_oversubscription=dci_oversubscription,
+                             schedule=schedule)
     stats = topology.hier_protocol(p, n_rounds, seed,
                                    timeout_scale=timeout_scale)["celeris"]
-    tag = (f"engine:celeris n={p.net.n_nodes} pods={n_pods} seed={seed} "
-           f"scale={timeout_scale}")
+    tag = (f"engine:celeris n={p.net.n_nodes} pods={n_pods} "
+           f"sched={p.work.schedule} seed={seed} scale={timeout_scale}")
     return split_schedule_from_round_stats(stats, source=tag)
 
 

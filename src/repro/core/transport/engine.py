@@ -72,6 +72,7 @@ import numpy as np
 
 from repro.core import timeout as timeout_mod
 from repro.core.transport import dcqcn, designs, network, replay, topology
+from repro.core.transport import schedule as schedule_mod
 from repro.core.transport.params import SimParams
 
 # Engine-native random sub-streams, all derived from the user seed.
@@ -91,6 +92,14 @@ _STREAM_WINDOW = 120       # bounded-window controller observation noise
 _BLOCK_ELEMENTS = 4 << 20
 
 
+def _tier_frac(got: np.ndarray, tot: np.ndarray) -> np.ndarray:
+    """Delivered fraction per tier; empty tiers report 1 (nothing to
+    lose).  The one tier-accounting rule every window assembly shares —
+    full rounds, truncated rounds, and the vectorized fixed window all
+    reduce to it with different ``got``."""
+    return np.where(tot > 0, got / np.maximum(tot, 1.0), 1.0)
+
+
 @dataclasses.dataclass
 class RoundStats:
     times_us: np.ndarray          # (rounds,)
@@ -101,6 +110,10 @@ class RoundStats:
     # track tiers (stream replay, the retained sequential reference)
     tier_recv_frac: np.ndarray | None = None    # (rounds, n_tiers)
     tier_counts: np.ndarray | None = None       # (n_tiers,) flows per tier
+    # (n_tiers,) offered packets per round per tier — the collective
+    # schedule's actual per-tier exposure (steps x flows x pkts), which
+    # the axis-split coupling uses as its weighting
+    tier_pkts: np.ndarray | None = None
 
     @property
     def p50(self) -> float:
@@ -150,11 +163,15 @@ class StepTrace:
     node_time_us: np.ndarray | None = None
     node_deliv: np.ndarray | None = None
     # per-tier reductions over the topology hierarchy (T, n_tiers) in
-    # topology.TIERS order; ``tier_cols`` holds the static flow-column
-    # index arrays the reductions sum over
+    # topology.TIERS order.  ``tier_cols`` holds the static flow-column
+    # index arrays of a *single-phase* (ring) schedule; multi-phase
+    # plans have a per-step flow→tier map instead, so it is None there
+    # and the per-tier sums are filled per phase.
     tier_deliv: np.ndarray | None = None
     tier_total: np.ndarray | None = None
     tier_cols: tuple | None = None
+    tier_counts: np.ndarray | None = None       # (n_tiers,) flows per tier
+    tier_pkts_round: np.ndarray | None = None   # (n_tiers,) offered/round
 
 
 class BatchedEngine:
@@ -168,8 +185,9 @@ class BatchedEngine:
         p = self.p
         net = p.net
         n = net.n_nodes
+        plan = schedule_mod.make_plan(net, p.topo, p.work)
         geo = dict(
-            n=n, steps=2 * (n - 1),
+            n=n, steps=plan.steps_per_round, plan=plan,
             n_pkts=max(1, (p.work.message_bytes // n) // net.mtu_bytes),
             src=np.arange(n), dst=(np.arange(n) + 1) % n,
             n_tors=n // net.nodes_per_tor,
@@ -179,19 +197,22 @@ class BatchedEngine:
         return geo
 
     def _new_traces(self, design_list, T, steps, n, per_node_for,
-                    tier_cols=None):
-        track = tier_cols is not None
+                    tier_cols=None, tier_counts=None, tier_pkts_round=None):
+        track = tier_counts is not None
         out: Dict[str, StepTrace] = {}
         for d in design_list:
             keep = d in per_node_for
             out[d] = StepTrace(
                 design=d, steps_per_round=steps,
                 nat_us=np.empty(T), deliv=np.empty(T), total=np.empty(T),
-                node_time_us=np.empty((T, n)) if keep else None,
-                node_deliv=np.empty((T, n)) if keep else None,
+                # per-node arrays start zeroed: multi-phase plans leave
+                # inactive (node, step) cells untouched
+                node_time_us=np.zeros((T, n)) if keep else None,
+                node_deliv=np.zeros((T, n)) if keep else None,
                 tier_deliv=np.empty((T, topology.N_TIERS)) if track else None,
                 tier_total=np.empty((T, topology.N_TIERS)) if track else None,
-                tier_cols=tier_cols)
+                tier_cols=tier_cols, tier_counts=tier_counts,
+                tier_pkts_round=tier_pkts_round)
         return out
 
     @staticmethod
@@ -206,6 +227,28 @@ class BatchedEngine:
         if tr.node_time_us is not None:
             tr.node_time_us[sl] = time_us
             tr.node_deliv[sl] = delivered
+
+    @staticmethod
+    def _phase_reduce_into(tr: StepTrace, rows: np.ndarray, src: np.ndarray,
+                           tier_cols: tuple, res) -> None:
+        """Scatter one schedule phase's transfer results into the trace.
+
+        ``rows`` are the phase's absolute step indices, ``src`` its
+        sender nodes (the per-node scatter columns) and ``tier_cols``
+        its flow→tier column sets.  On a single-phase (ring) plan this
+        reduces to exactly :meth:`_reduce_into` over the block slice.
+        """
+        tr.nat_us[rows] = res.time_us.max(axis=-1)
+        tr.deliv[rows] = res.delivered_pkts.sum(axis=-1)
+        tr.total[rows] = res.total_pkts.sum(axis=-1)
+        if tr.tier_deliv is not None:
+            for k, cols in enumerate(tier_cols):
+                tr.tier_deliv[rows, k] = (
+                    res.delivered_pkts[..., cols].sum(axis=-1))
+                tr.tier_total[rows, k] = res.total_pkts[..., cols].sum(axis=-1)
+        if tr.node_time_us is not None:
+            tr.node_time_us[np.ix_(rows, src)] = res.time_us
+            tr.node_deliv[np.ix_(rows, src)] = res.delivered_pkts
 
     def traces(self, design_list: Sequence[str], n_rounds: int, seed: int, *,
                legacy_streams: bool = True,
@@ -248,6 +291,13 @@ class BatchedEngine:
             # multi-pod fabric
             raise ValueError(
                 "hierarchical topologies (n_pods > 1) require "
+                "legacy_streams=False (shared-fabric mode)")
+        if self.p.work.schedule != "ring" and legacy_streams:
+            # same contract for non-ring collective schedules: the
+            # sequential simulator only ever ran the flat ring, so there
+            # is no stream to replay for any other plan
+            raise ValueError(
+                f"schedule={self.p.work.schedule!r} requires "
                 "legacy_streams=False (shared-fabric mode)")
         if legacy_streams:
             return self._traces_legacy(design_list, n_rounds, seed,
@@ -323,13 +373,16 @@ class BatchedEngine:
         rates, _ = dcqcn.rate_trace(np.stack(channels, axis=1), p.dcqcn,
                                     dtype=np.float32)
 
+        tier_counts = g["hier"].tier_counts
         out = self._new_traces(design_list, T, steps, n, per_node_for,
-                               tier_cols=g["hier"].tier_cols)
+                               tier_cols=g["hier"].tier_cols,
+                               tier_counts=tier_counts,
+                               tier_pkts_round=tier_counts
+                               * float(n_pkts * steps))
         if need_clean:
             qd_clean = network.queue_delay_us(net, occ_clean32)
             avail_clean = network.avail_bandwidth(net, occ_clean32)
         full_total = np.full(T, float(n_pkts * n))
-        tier_counts = g["hier"].tier_counts
 
         if need_roce:
             rate_d = np.ascontiguousarray(rates[:, chan_idx["roce"]])
@@ -396,12 +449,23 @@ class BatchedEngine:
     # -- shared (sweep) mode -------------------------------------------
     def _traces_shared(self, design_list, n_rounds, seed, per_node_for,
                        round_block) -> Dict[str, StepTrace]:
+        """One physics pass driven by the collective schedule's plan.
+
+        The plan's phases partition each round's steps; every phase is
+        a dense ``(step, flow)`` block with a static flow pattern, so
+        the whole-trace vectorization survives arbitrary schedules.
+        On the single-phase ring plan each per-phase pass covers every
+        row of the block, making this bit-identical to the
+        pre-schedule engine (the per-phase loop touches the same
+        arrays with the same draws in the same order).
+        """
         p = self.p
         net, rel = p.net, p.rel
         g = self._geometry(seed)
-        n, steps, n_pkts = g["n"], g["steps"], g["n_pkts"]
+        n, steps = g["n"], g["steps"]
+        plan: schedule_mod.SchedulePlan = g["plan"]
         T = n_rounds * steps
-        src, dst, n_tors = g["src"], g["dst"], g["n_tors"]
+        n_tors = g["n_tors"]
 
         if round_block is None:
             round_block = max(1, _BLOCK_ELEMENTS // (steps * n))
@@ -421,7 +485,6 @@ class BatchedEngine:
         # DCI tier (multi-pod only): its own burst process and random
         # substreams, so the flat (n_pods=1) trace consumes exactly the
         # streams it always did
-        hg = g["hier"]
         hier = p.topo.hierarchical
         if hier:
             dci_net = topology.dci_net_params(net, p.topo)
@@ -431,46 +494,87 @@ class BatchedEngine:
             dci_cnp_gen = np.random.default_rng(
                 [seed, topology.STREAM_DCI_CNP])
 
-        out = self._new_traces(design_list, T, steps, n, per_node_for,
-                               tier_cols=hg.tier_cols)
+        # static per-phase facts: flow→tier geometry, packet budget,
+        # in-round step offsets
+        hgs = plan.geometries(net, p.topo)
+        ph_pkts = [ph.n_pkts(net) for ph in plan.phases]
+        ph_steps = [np.flatnonzero(plan.phase_of_step == k)
+                    for k in range(len(plan.phases))]
+
+        out = self._new_traces(
+            design_list, T, steps, n, per_node_for,
+            tier_cols=hgs[0].tier_cols if plan.single_phase else None,
+            tier_counts=plan.tier_counts(net, p.topo, hgs),
+            tier_pkts_round=plan.tier_pkts_round(net, p.topo, hgs))
         for t0 in range(0, T, block_steps):
-            tb = min(block_steps, T - t0)
-            sl = slice(t0, t0 + tb)
+            tb = min(block_steps, T - t0)   # whole rounds: steps | tb
             u = fabric_gen.random((tb, network._ADVANCE_DRAWS, n_tors))
             _, occ_tor, fab_state = network.occupancy_trace(net, u, fab_state)
-            ecn_p, drop_p, hot = _sparse_path_curves(net, occ_tor, src, dst)
-            occ32 = network.path_occupancy_trace(
-                net, occ_tor.astype(np.float32), src, dst)
 
             if hier:
                 u_dci = dci_fab_gen.random(
                     (tb, network._ADVANCE_DRAWS, p.topo.n_pods))
                 _, occ_dci, dci_state = network.occupancy_trace(
                     dci_net, u_dci, dci_state)
-                occ_eff = topology.overlay_curves(net, p.topo, hg, occ_tor,
-                                                  occ_dci, ecn_p, drop_p)
 
+            # phase pass 1: path curves + CNP draws per phase block
+            # (phase rows of the block share the phase's flow pattern)
             cnp = np.zeros((tb, n), dtype=bool)
-            cnp[hot] = cnp_gen.random((hot.size, n)) < ecn_p[hot]
-            if hier:
-                topology.dci_cnp_draws(hg, ecn_p, cnp, dci_cnp_gen)
+            round0 = np.arange(0, tb, steps)
+            ph_data = []
+            for k, ph in enumerate(plan.phases):
+                rows = (round0[:, None] + ph_steps[k][None, :]).ravel()
+                occ_ph = occ_tor[rows] if not plan.single_phase else occ_tor
+                ecn_p, drop_p, hot = _sparse_path_curves(net, occ_ph,
+                                                         ph.src, ph.dst)
+                occ32 = network.path_occupancy_trace(
+                    net, occ_ph.astype(np.float32), ph.src, ph.dst)
+                occ_eff = None
+                if hier:
+                    occ_eff = topology.overlay_curves(
+                        net, p.topo, hgs[k], occ_ph,
+                        occ_dci[rows] if not plan.single_phase else occ_dci,
+                        ecn_p, drop_p)
+                cnp_ph = np.zeros((rows.size, ph.src.size), dtype=bool)
+                cnp_ph[hot] = (cnp_gen.random((hot.size, ph.src.size))
+                               < ecn_p[hot])
+                if hier:
+                    topology.dci_cnp_draws(hgs[k], ecn_p, cnp_ph, dci_cnp_gen)
+                cnp[np.ix_(rows, ph.src)] = cnp_ph
+                ph_data.append([rows, occ32, drop_p, occ_eff])
+
+            # the DCQCN recurrence runs over the full block — per
+            # *sender NIC*, whose rate evolves across phase boundaries
+            # (recovering through steps it does not send in)
             rate, cc_state = dcqcn.rate_trace(cnp, p.dcqcn, cc_state,
                                               dtype=np.float32)
 
-            qd = network.queue_delay_us(net, occ32)
-            eff_rate = rate * network.avail_bandwidth(net, occ32)
-            if hier:
-                topology.overlay_rates(net, p.topo, hg, occ_eff, rate,
-                                       occ32, qd, eff_rate)
-            for d in design_list:
-                pfc = (network.pfc_pause_trace(net, occ32, pfc_gen)
-                       if d == "roce" else np.zeros((tb, n), np.float32))
-                res = designs.transfer(d, n_pkts, occ32, eff_rate, drop_p,
-                                       pfc, qd, rel, net, transfer_gens[d])
+            # phase pass 2: queueing + effective send rate (+ DCI
+            # overlay) per phase block
+            for k, ph in enumerate(plan.phases):
+                rows, occ32, drop_p, occ_eff = ph_data[k]
+                qd = network.queue_delay_us(net, occ32)
+                rate_ph = (rate if plan.single_phase
+                           else rate[np.ix_(rows, ph.src)])
+                eff_rate = rate_ph * network.avail_bandwidth(net, occ32)
                 if hier:
-                    topology.add_dci_latency(p.topo, hg, res.time_us)
-                self._reduce_into(out[d], sl, res.time_us,
-                                  res.delivered_pkts, res.total_pkts)
+                    topology.overlay_rates(net, p.topo, hgs[k], occ_eff,
+                                           rate_ph, occ32, qd, eff_rate)
+                ph_data[k] = (rows, occ32, drop_p, qd, eff_rate)
+
+            for d in design_list:
+                for k, ph in enumerate(plan.phases):
+                    rows, occ32, drop_p, qd, eff_rate = ph_data[k]
+                    pfc = (network.pfc_pause_trace(net, occ32, pfc_gen)
+                           if d == "roce"
+                           else np.zeros(occ32.shape, np.float32))
+                    res = designs.transfer(d, ph_pkts[k], occ32, eff_rate,
+                                           drop_p, pfc, qd, rel, net,
+                                           transfer_gens[d])
+                    if hier:
+                        topology.add_dci_latency(p.topo, hgs[k], res.time_us)
+                    self._phase_reduce_into(out[d], t0 + rows, ph.src,
+                                            hgs[k].tier_cols, res)
         return out
 
     # ------------------------------------------------------------------
@@ -487,31 +591,31 @@ class BatchedEngine:
         total = trace.total.reshape(R, steps)
         tot_sum = np.maximum(total.sum(axis=1), 1.0)
 
-        t_deliv = t_total = tier_counts = None
+        t_deliv = t_total = None
         if trace.tier_deliv is not None:
             t_deliv = trace.tier_deliv.reshape(R, steps, -1)
             t_total = trace.tier_total.reshape(R, steps, -1)
-            tier_counts = np.array([c.size for c in trace.tier_cols])
-
-        def tier_frac_full():
-            """(R, n_tiers) delivered fraction; empty tiers report 1."""
-            tot = t_total.sum(axis=1)
-            return np.where(tot > 0,
-                            t_deliv.sum(axis=1) / np.maximum(tot, 1.0), 1.0)
+        tier_kw = dict(tier_counts=trace.tier_counts,
+                       tier_pkts=trace.tier_pkts_round)
 
         if trace.design != "celeris":
+            tf = None
+            if t_deliv is not None:
+                tf = _tier_frac(t_deliv.sum(axis=1), t_total.sum(axis=1))
             return RoundStats(times_us=nat.sum(axis=1),
                               recv_frac=deliv.sum(axis=1) / tot_sum,
                               design=trace.design,
-                              tier_recv_frac=(None if t_deliv is None
-                                              else tier_frac_full()),
-                              tier_counts=tier_counts)
+                              tier_recv_frac=tf, **tier_kw)
 
         if window == "step" and trace.node_time_us is None:
             raise ValueError(
                 "window='step' needs per-flow data: build the trace with "
                 "traces(..., per_node_for=('celeris',)) or use "
                 "BatchedEngine.run(), which sets it up")
+        if window == "step" and t_deliv is not None and trace.tier_cols is None:
+            raise ValueError(
+                "window='step' tier accounting needs a single-phase (ring) "
+                "schedule: a multi-phase plan has no static node→tier map")
 
         init_to = (celeris_timeout_us or 50_000.0) / 1e6
         cfg = timeout_mod.TimeoutConfig(
@@ -521,7 +625,7 @@ class BatchedEngine:
         if window == "round" and not adaptive:
             return self._assemble_round_window_fixed(
                 trace, nat, deliv, tot_sum, init_to * 1e6,
-                t_deliv, t_total, tier_counts)
+                t_deliv, t_total, tier_kw)
 
         rng = np.random.default_rng([seed, _STREAM_WINDOW])
         n = self.p.net.n_nodes
@@ -531,10 +635,6 @@ class BatchedEngine:
         fracs = np.ones(R)
         t_fracs = (np.ones((R, topology.N_TIERS))
                    if t_deliv is not None else None)
-
-        def tier_frac_round(r, got_t):
-            tot = t_total[r].sum(axis=0)
-            return np.where(tot > 0, got_t / np.maximum(tot, 1.0), 1.0)
 
         cum = np.cumsum(nat, axis=1)
         for r in range(R):
@@ -551,14 +651,13 @@ class BatchedEngine:
                 if t_fracs is not None:
                     got_t = np.array([got_node[:, c].sum()
                                       for c in trace.tier_cols])
-                    t_fracs[r] = tier_frac_round(r, got_t)
+                    t_fracs[r] = _tier_frac(got_t, t_total[r].sum(axis=0))
             else:
                 total_t = cum[r, -1]
                 if total_t <= budget_us:
                     times[r] = total_t
                     fracs[r] = deliv[r].sum() / tot_sum[r]
-                    if t_fracs is not None:
-                        t_fracs[r] = tier_frac_round(r, t_deliv[r].sum(0))
+                    got_t = None if t_fracs is None else t_deliv[r].sum(0)
                 else:
                     times[r] = budget_us
                     done = cum[r] <= budget_us
@@ -567,10 +666,11 @@ class BatchedEngine:
                     part = (budget_us - prev) / max(nat[r, bidx], 1e-9)
                     got = deliv[r][done].sum() + deliv[r, bidx] * part
                     fracs[r] = got / tot_sum[r]
-                    if t_fracs is not None:
-                        got_t = ((t_deliv[r] * done[:, None]).sum(0)
-                                 + t_deliv[r, bidx] * part)
-                        t_fracs[r] = tier_frac_round(r, got_t)
+                    got_t = (None if t_fracs is None
+                             else (t_deliv[r] * done[:, None]).sum(0)
+                             + t_deliv[r, bidx] * part)
+                if got_t is not None:
+                    t_fracs[r] = _tier_frac(got_t, t_total[r].sum(axis=0))
             if adaptive:
                 node_frac = np.clip(
                     fracs[r] + rng.normal(0, 0.002, n), 0.0, 1.0)
@@ -579,12 +679,12 @@ class BatchedEngine:
                 timeout = timeout_mod.adopt_scalar(
                     timeout_mod.coordinate(local), cfg)
         return RoundStats(times_us=times, recv_frac=fracs, design="celeris",
-                          tier_recv_frac=t_fracs, tier_counts=tier_counts)
+                          tier_recv_frac=t_fracs, **tier_kw)
 
     @staticmethod
     def _assemble_round_window_fixed(trace, nat, deliv, tot_sum, budget_us,
                                      t_deliv=None, t_total=None,
-                                     tier_counts=None):
+                                     tier_kw=None):
         """Fixed bounded round window, all rounds at once (paper protocol)."""
         cum = np.cumsum(nat, axis=1)
         total_t = cum[:, -1]
@@ -612,12 +712,10 @@ class BatchedEngine:
             got_t = ((t_deliv * done[:, :, None]).sum(axis=1)
                      + t_deliv[np.arange(R), bidx] * part[:, None])
             full_t = t_deliv.sum(axis=1)
-            tot_t = np.maximum(t_total.sum(axis=1), 1.0)
-            has = t_total.sum(axis=1) > 0
-            t_fracs = np.where(
-                has, np.where(over[:, None], got_t, full_t) / tot_t, 1.0)
+            t_fracs = _tier_frac(np.where(over[:, None], got_t, full_t),
+                                 t_total.sum(axis=1))
         return RoundStats(times_us=times, recv_frac=fracs, design="celeris",
-                          tier_recv_frac=t_fracs, tier_counts=tier_counts)
+                          tier_recv_frac=t_fracs, **(tier_kw or {}))
 
     # ------------------------------------------------------------------
     def run(self, design: str, n_rounds: int = 400, *,
@@ -632,6 +730,10 @@ class BatchedEngine:
             # the adaptive controller's per-round normal() draws make the
             # sequential stream irreproducible — engine-native draws (the
             # fabric trace is identical either way)
+            legacy_streams = False
+        if self.p.work.schedule != "ring":
+            # non-ring schedules exist only in shared-fabric mode (no
+            # sequential stream to replay)
             legacy_streams = False
         tr = self.traces([design], n_rounds, seed,
                          legacy_streams=legacy_streams, per_node_for=keep)
@@ -670,12 +772,14 @@ class BatchedSimParams:
     pins them explicitly.  ``n_pods`` adds the hierarchical-topology
     dimension: pod counts > 1 run with the DCI overlay
     (:mod:`repro.core.transport.topology`) configured from
-    ``base.topo``.
+    ``base.topo``.  ``schedules`` adds the collective-schedule
+    dimension ("ring" | "hier", :mod:`repro.core.transport.schedule`).
     """
     n_nodes: Sequence[int] = (128,)
     message_mb: Sequence[float] = (25.0,)
     seeds: Sequence[int] = (0,)
     n_pods: Sequence[int] = (1,)
+    schedules: Sequence[str] = ("ring",)
     designs: Sequence[str] = designs.DESIGNS
     n_rounds: int = 200
     celeris_timeout_us: float | None = None
@@ -688,45 +792,77 @@ class SweepResult:
     """``stats[(design, n_nodes, message_mb, seed)] -> RoundStats``.
 
     When the grid sweeps pods (``n_pods != (1,)``) keys grow a trailing
-    pod-count element: ``(design, n_nodes, message_mb, seed, n_pods)``.
+    pod-count element, and when it sweeps schedules (``schedules !=
+    ("ring",)``) a trailing schedule name after that:
+    ``(design, n_nodes, message_mb, seed[, n_pods][, schedule])``.
     """
     params: BatchedSimParams
     stats: Dict[tuple, RoundStats]
 
-    def _key(self, d, nn, mb, s, npods):
-        if tuple(self.params.n_pods) == (1,):
-            return (d, nn, mb, s)
-        return (d, nn, mb, s, npods)
+    def _key(self, d, nn, mb, s, npods, sched="ring"):
+        key = (d, nn, mb, s)
+        if tuple(self.params.n_pods) != (1,):
+            key += (npods,)
+        if tuple(self.params.schedules) != ("ring",):
+            key += (sched,)
+        return key
+
+    def _defaults(self, *, message_mb=None, n_pods=None, schedule=None,
+                  n_nodes=None):
+        p = self.params
+        return (p.n_nodes[0] if n_nodes is None else n_nodes,
+                p.message_mb[0] if message_mb is None else message_mb,
+                p.n_pods[0] if n_pods is None else n_pods,
+                p.schedules[0] if schedule is None else schedule)
 
     def p99_vs_scale(self, design: str, message_mb: float | None = None,
-                     n_pods: int | None = None
+                     n_pods: int | None = None,
+                     schedule: str | None = None
                      ) -> Dict[int, tuple[float, float]]:
         """{n_nodes: (mean p99 over seeds, std over seeds)}."""
-        mb = message_mb if message_mb is not None else self.params.message_mb[0]
-        npods = n_pods if n_pods is not None else self.params.n_pods[0]
+        _, mb, npods, sched = self._defaults(message_mb=message_mb,
+                                             n_pods=n_pods,
+                                             schedule=schedule)
         out = {}
         for nn in self.params.n_nodes:
-            v = [self.stats[self._key(design, nn, mb, s, npods)].p99
+            v = [self.stats[self._key(design, nn, mb, s, npods, sched)].p99
                  for s in self.params.seeds]
             out[nn] = (float(np.mean(v)), float(np.std(v)))
         return out
 
     def p99_vs_pods(self, design: str, n_nodes: int | None = None,
-                    message_mb: float | None = None
+                    message_mb: float | None = None,
+                    schedule: str | None = None
                     ) -> Dict[int, tuple[float, float]]:
         """{n_pods: (mean p99 over seeds, std over seeds)}."""
-        nn = n_nodes if n_nodes is not None else self.params.n_nodes[0]
-        mb = message_mb if message_mb is not None else self.params.message_mb[0]
+        nn, mb, _, sched = self._defaults(message_mb=message_mb,
+                                          schedule=schedule,
+                                          n_nodes=n_nodes)
         out = {}
         for npods in self.params.n_pods:
-            v = [self.stats[self._key(design, nn, mb, s, npods)].p99
+            v = [self.stats[self._key(design, nn, mb, s, npods, sched)].p99
                  for s in self.params.seeds]
             out[npods] = (float(np.mean(v)), float(np.std(v)))
         return out
 
+    def p99_vs_schedule(self, design: str, n_nodes: int | None = None,
+                        message_mb: float | None = None,
+                        n_pods: int | None = None
+                        ) -> Dict[str, tuple[float, float]]:
+        """{schedule: (mean p99 over seeds, std over seeds)} — the
+        ring-vs-hierarchical comparison on one fabric configuration."""
+        nn, mb, npods, _ = self._defaults(message_mb=message_mb,
+                                          n_pods=n_pods, n_nodes=n_nodes)
+        out = {}
+        for sched in self.params.schedules:
+            v = [self.stats[self._key(design, nn, mb, s, npods, sched)].p99
+                 for s in self.params.seeds]
+            out[sched] = (float(np.mean(v)), float(np.std(v)))
+        return out
+
     def summary_rows(self):
-        """Flat (design, n_nodes, message_mb, seed[, n_pods], p50, p99,
-        loss) rows."""
+        """Flat (design, n_nodes, message_mb, seed[, n_pods][, schedule],
+        p50, p99, loss) rows."""
         rows = []
         for key, st in sorted(self.stats.items()):
             rows.append(key + (st.p50, st.p99, st.mean_loss))
@@ -738,7 +874,6 @@ def sweep(params: BatchedSimParams | None = None, *, progress=None
     """Run the sweep grid; designs share one physics pass per (config,
     seed).  ``progress``: optional callable(str) for liveness logging."""
     bp = params or BatchedSimParams()
-    pods_swept = tuple(bp.n_pods) != (1,)
     if bp.legacy_streams and any(np_ > 1 for np_ in bp.n_pods):
         # same contract as BatchedEngine.traces: there is no flat
         # sequential stream to replay for a multi-pod fabric, and
@@ -746,41 +881,47 @@ def sweep(params: BatchedSimParams | None = None, *, progress=None
         # turn pod comparisons into stream-methodology artifacts
         raise ValueError("legacy_streams=True is incompatible with "
                          "n_pods > 1 sweep cells")
-    stats: Dict[tuple, RoundStats] = {}
+    if bp.legacy_streams and any(sc != "ring" for sc in bp.schedules):
+        raise ValueError("legacy_streams=True is incompatible with "
+                         "non-ring schedule sweep cells")
+    res = SweepResult(params=bp, stats={})
     for nn in bp.n_nodes:
         for mb in bp.message_mb:
             for npods in bp.n_pods:
-                p = dataclasses.replace(
-                    bp.base,
-                    net=dataclasses.replace(bp.base.net, n_nodes=nn),
-                    work=dataclasses.replace(bp.base.work,
-                                             message_bytes=int(mb * 2**20)),
-                    topo=dataclasses.replace(bp.base.topo, n_pods=npods))
-                eng = BatchedEngine(p)
-                for s in bp.seeds:
-                    if progress is not None:
-                        progress(f"n_nodes={nn} message_mb={mb} "
-                                 f"n_pods={npods} seed={s}")
-                    tr = eng.traces(list(bp.designs), bp.n_rounds, s,
-                                    legacy_streams=bp.legacy_streams)
-                    to = bp.celeris_timeout_us
-                    if "celeris" in bp.designs and to is None:
-                        if "roce" in bp.designs:
-                            base = eng.assemble(tr["roce"], s)
-                            to = float(np.percentile(base.times_us, 50)
-                                       + base.times_us.std())
-                        else:
-                            to = 50_000.0
-                    for d in bp.designs:
-                        key = ((d, nn, mb, s, npods) if pods_swept
-                               else (d, nn, mb, s))
-                        if d == "celeris":
-                            stats[key] = eng.assemble(
-                                tr[d], s, celeris_timeout_us=to,
-                                adaptive=False, window="round")
-                        else:
-                            stats[key] = eng.assemble(tr[d], s)
-    return SweepResult(params=bp, stats=stats)
+                for sched in bp.schedules:
+                    p = dataclasses.replace(
+                        bp.base,
+                        net=dataclasses.replace(bp.base.net, n_nodes=nn),
+                        work=dataclasses.replace(
+                            bp.base.work, message_bytes=int(mb * 2**20),
+                            schedule=sched),
+                        topo=dataclasses.replace(bp.base.topo,
+                                                 n_pods=npods))
+                    eng = BatchedEngine(p)
+                    for s in bp.seeds:
+                        if progress is not None:
+                            progress(f"n_nodes={nn} message_mb={mb} "
+                                     f"n_pods={npods} schedule={sched} "
+                                     f"seed={s}")
+                        tr = eng.traces(list(bp.designs), bp.n_rounds, s,
+                                        legacy_streams=bp.legacy_streams)
+                        to = bp.celeris_timeout_us
+                        if "celeris" in bp.designs and to is None:
+                            if "roce" in bp.designs:
+                                base = eng.assemble(tr["roce"], s)
+                                to = float(np.percentile(base.times_us, 50)
+                                           + base.times_us.std())
+                            else:
+                                to = 50_000.0
+                        for d in bp.designs:
+                            key = res._key(d, nn, mb, s, npods, sched)
+                            if d == "celeris":
+                                res.stats[key] = eng.assemble(
+                                    tr[d], s, celeris_timeout_us=to,
+                                    adaptive=False, window="round")
+                            else:
+                                res.stats[key] = eng.assemble(tr[d], s)
+    return res
 
 
 # ----------------------------------------------------------------------

@@ -63,17 +63,25 @@ class TopologyParams:
     oversubscription penalty, and extra propagation delay.  The DCI
     tier is where the paper's best-effort transport matters most: it is
     the contended, lossy, high-RTT hop that dominates cross-pod tails.
+
+    ``dci_oversubscription`` and ``dci_burst_on_prob`` also accept a
+    per-pod tuple (length ``n_pods``) so asymmetric "hot pod"
+    scenarios are expressible — one pod's DCI uplink oversubscribed or
+    bursting harder than the others.  A cross-pod flow pays the worse
+    of its two endpoint pods' oversubscription (it traverses both
+    uplinks).  Scalars keep the exact pre-vector code paths, so scalar
+    configs stay bit-identical with the flat per-pod model.
     """
     n_pods: int = 1
     # pod egress bandwidth divisor: a 4:1 oversubscribed DCI gives each
     # cross-pod flow 1/4 of the per-link line rate under contention
-    dci_oversubscription: float = 4.0
+    dci_oversubscription: "float | tuple" = 4.0
     dci_rtt_us: float = 12.0            # extra one-way propagation, inter-pod
 
     # DCI burst process: inter-pod links aggregate many jobs, so bursts
     # are far more frequent, hotter, and the idle floor is higher than
     # the ToR uplinks'.
-    dci_burst_on_prob: float = 0.003
+    dci_burst_on_prob: "float | tuple" = 0.003
     dci_burst_off_prob: float = 0.01
     dci_burst_occupancy_lo: float = 0.60
     dci_burst_occupancy_hi: float = 0.97
@@ -108,7 +116,11 @@ class ReliabilityParams:
 @dataclasses.dataclass(frozen=True)
 class WorkloadParams:
     message_bytes: int = 25 * 1024 * 1024   # 25 MB per node per round
-    algorithm: str = "ring"                  # ring reduce-scatter + all-gather
+    # collective schedule riding the fabric (core/transport/schedule.py):
+    # "ring" — flat 2(N-1)-step ring RS+AG, every step message/N bytes;
+    # "hier" — reduce-scatter within pod -> pod-leader DCI exchange with
+    # 1/n_pods-sized shards -> all-gather within pod.
+    schedule: str = "ring"
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,223 @@
+"""Pluggable collective communication schedules.
+
+The engine used to hardcode one communication pattern: a flat
+``2(N-1)``-step ring whose every step moves ``message/N`` bytes between
+ring neighbors — even across a multi-pod hierarchy, so the DCI
+oversubscription penalty was charged to *every* hop instead of only the
+cross-pod exchange.  This module extracts that choice into data: a
+:class:`CollectiveSchedule` produces a :class:`SchedulePlan` — the
+per-round sequence of steps, each step a set of concurrent flows with
+``(src, dst, tier, payload_bytes)`` — that the engine's vectorized
+trace loop consumes (``BatchedEngine._traces_shared`` times one phase
+block at a time) and the coupling layer reads for its step→tier map.
+
+Steps group into *phases*: contiguous step runs sharing one static flow
+pattern and per-step payload, so each phase stays a dense
+``(step, flow)`` tensor block and the engine loses none of its
+vectorization.  Payload accounting follows the standard ring
+reduce-scatter / all-gather arithmetic — an ``N``-peer ring RS (or AG)
+of an ``M``-byte message takes ``N-1`` steps of ``M/N`` bytes per flow:
+
+- :class:`RingSchedule` — the flat ring: one phase, ``2(N-1)`` steps of
+  ``M/N`` bytes (RS immediately followed by AG over all ``N`` nodes).
+  Selecting it reproduces the pre-schedule engine bit-exactly (pinned
+  by ``tests/test_schedule.py`` against committed seed stats).
+- :class:`HierarchicalSchedule` — the hierarchy-aware plan for
+  ``n_pods`` pods of ``m = N / n_pods`` nodes:
+
+  1. ``rs``  — reduce-scatter inside each pod: ``m-1`` steps of ``M/m``
+     bytes on the intra-pod ring (tor/spine tiers only);
+  2. ``dci`` — pod leaders all-reduce the pod-reduced message over the
+     DCI: a ``2(n_pods-1)``-step ring of ``M/n_pods``-byte shards —
+     the *only* steps that traverse the oversubscribed uplinks;
+  3. ``ag``  — all-gather inside each pod: ``m-1`` steps of ``M/m``.
+
+  Total ``2(m-1) + 2(n_pods-1)`` steps versus the flat ``2(N-1)``; the
+  DCI penalty applies to ``2(n_pods-1)`` large-shard steps instead of
+  all of them, which is what moves the cross-pod tail (Fig. 5).  At
+  ``n_pods=1`` the plan degenerates to the flat ring exactly.
+
+Select a schedule with ``SimParams.work.schedule`` (``"ring"`` |
+``"hier"``), sweep it with ``BatchedSimParams.schedules``, and train
+against it with ``CollectiveMode.HIERARCHICAL`` — the trainer's sync
+order (exact intra-pod reduce → coded cross-pod exchange) mirrors
+:attr:`HierarchicalSchedule.PHASE_ORDER`, asserted in
+``train_step.make_train_step``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.transport import topology
+from repro.core.transport.params import (NetworkParams, TopologyParams,
+                                         WorkloadParams)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SchedulePhase:
+    """A contiguous run of steps sharing one static flow pattern.
+
+    ``payload_bytes`` is per flow per step; a flow's sender column in
+    the engine's ``(step, node)`` tensors is its ``src`` node (each
+    node sends at most one flow per step in every schedule here).
+    """
+    name: str
+    src: np.ndarray            # (n_flows,) sender node per flow
+    dst: np.ndarray            # (n_flows,) receiver node per flow
+    n_steps: int               # steps of this phase per round
+    payload_bytes: int         # bytes per flow per step
+
+    def n_pkts(self, net: NetworkParams) -> int:
+        return max(1, self.payload_bytes // net.mtu_bytes)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SchedulePlan:
+    """One round of a collective schedule, resolved for a topology."""
+    schedule: str
+    phases: tuple              # of SchedulePhase, in execution order
+    steps_per_round: int
+    phase_of_step: np.ndarray  # (steps_per_round,) phase index per step
+
+    @property
+    def single_phase(self) -> bool:
+        return len(self.phases) == 1
+
+    def geometries(self, net: NetworkParams, topo: TopologyParams) -> tuple:
+        """Per-phase :class:`topology.HierGeometry` (flow→tier maps)."""
+        return tuple(topology.hier_geometry(net, topo, src=ph.src,
+                                            dst=ph.dst)
+                     for ph in self.phases)
+
+    def step_table(self, net: NetworkParams, topo: TopologyParams) -> list:
+        """The explicit per-step plan: ``(src, dst, tiers,
+        payload_bytes)`` per step, tiers as indexes into
+        ``topology.TIERS``.  The engine consumes the phase blocks; this
+        flat view is for tests, docs, and the coupling layer's
+        step→tier map."""
+        rows = []
+        for ph, hg in zip(self.phases, self.geometries(net, topo)):
+            rows.extend([(ph.src, ph.dst, hg.tiers, ph.payload_bytes)]
+                        * ph.n_steps)
+        return rows
+
+    def tier_counts(self, net: NetworkParams, topo: TopologyParams,
+                    geometries: tuple | None = None) -> np.ndarray:
+        """(n_tiers,) flows per tier, summed over phases.  Pass
+        ``geometries`` when :meth:`geometries` is already in hand (the
+        engine does) to skip recomputing it."""
+        gs = geometries if geometries is not None else self.geometries(
+            net, topo)
+        out = np.zeros(topology.N_TIERS, dtype=int)
+        for hg in gs:
+            out += hg.tier_counts
+        return out
+
+    def tier_pkts_round(self, net: NetworkParams, topo: TopologyParams,
+                        geometries: tuple | None = None) -> np.ndarray:
+        """(n_tiers,) offered packets per round per tier — the
+        schedule's actual per-tier exposure, which weights the
+        axis-split drop schedules (``coupling``)."""
+        gs = geometries if geometries is not None else self.geometries(
+            net, topo)
+        out = np.zeros(topology.N_TIERS)
+        for ph, hg in zip(self.phases, gs):
+            out += hg.tier_counts * (ph.n_pkts(net) * ph.n_steps)
+        return out
+
+    def bytes_per_round(self) -> int:
+        """Total bytes offered to the fabric per round (all flows, all
+        steps) — the payload-conservation invariant tests pin."""
+        return sum(ph.src.size * ph.n_steps * ph.payload_bytes
+                   for ph in self.phases)
+
+
+def _mk_plan(name: str, phases) -> SchedulePlan:
+    phases = tuple(ph for ph in phases if ph.n_steps > 0)
+    steps = sum(ph.n_steps for ph in phases)
+    phase_of_step = np.repeat(np.arange(len(phases)),
+                              [ph.n_steps for ph in phases])
+    return SchedulePlan(schedule=name, phases=phases, steps_per_round=steps,
+                        phase_of_step=phase_of_step)
+
+
+class CollectiveSchedule:
+    """Produces the per-step flow plan the engine times."""
+
+    name: str = "?"
+
+    def plan(self, net: NetworkParams, topo: TopologyParams,
+             work: WorkloadParams) -> SchedulePlan:
+        raise NotImplementedError
+
+
+class RingSchedule(CollectiveSchedule):
+    """Flat ring RS+AG over all nodes: ``2(N-1)`` steps of ``M/N``
+    bytes.  Bit-exact replica of the pre-schedule engine."""
+
+    name = "ring"
+
+    def plan(self, net, topo, work):
+        n = net.n_nodes
+        src = np.arange(n)
+        ring = SchedulePhase(name="ring", src=src, dst=(src + 1) % n,
+                             n_steps=2 * (n - 1),
+                             payload_bytes=work.message_bytes // n)
+        return _mk_plan(self.name, (ring,))
+
+
+class HierarchicalSchedule(CollectiveSchedule):
+    """Reduce-scatter within pod → leader DCI exchange → all-gather
+    within pod (see module docstring for the step/payload accounting)."""
+
+    name = "hier"
+    # Execution order of the phases; the trainer's HIERARCHICAL sync
+    # (exact intra-pod reduce first, coded cross-pod exchange second)
+    # asserts against this so schedule and collective mode can't drift
+    # apart silently.
+    PHASE_ORDER = ("rs", "dci", "ag")
+
+    def plan(self, net, topo, work):
+        topology.validate(net, topo)
+        n, n_pods = net.n_nodes, topo.n_pods
+        if n_pods == 1:
+            # degenerate hierarchy: the plan IS the flat ring (single
+            # phase, so it stays bit-exact with RingSchedule too)
+            return dataclasses.replace(RingSchedule().plan(net, topo, work),
+                                       schedule=self.name)
+        m = n // n_pods
+        src = np.arange(n)
+        pod = src // m
+        nxt = pod * m + (src - pod * m + 1) % m     # intra-pod ring
+        leaders = np.arange(n_pods) * m
+        phases = (
+            SchedulePhase(name="rs", src=src, dst=nxt, n_steps=m - 1,
+                          payload_bytes=work.message_bytes // m),
+            SchedulePhase(name="dci", src=leaders,
+                          dst=((np.arange(n_pods) + 1) % n_pods) * m,
+                          n_steps=2 * (n_pods - 1),
+                          payload_bytes=work.message_bytes // n_pods),
+            SchedulePhase(name="ag", src=src, dst=nxt, n_steps=m - 1,
+                          payload_bytes=work.message_bytes // m),
+        )
+        assert tuple(ph.name for ph in phases) == self.PHASE_ORDER
+        return _mk_plan(self.name, phases)
+
+
+SCHEDULES = {cls.name: cls for cls in (RingSchedule, HierarchicalSchedule)}
+
+
+def get_schedule(name: str) -> CollectiveSchedule:
+    try:
+        return SCHEDULES[name]()
+    except KeyError:
+        raise ValueError(f"unknown collective schedule {name!r}; choose "
+                         f"from {sorted(SCHEDULES)}") from None
+
+
+def make_plan(net: NetworkParams, topo: TopologyParams,
+              work: WorkloadParams) -> SchedulePlan:
+    """The plan for ``work.schedule`` on this topology."""
+    return get_schedule(work.schedule).plan(net, topo, work)

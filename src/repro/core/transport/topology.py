@@ -48,6 +48,17 @@ STREAM_DCI_FABRIC = 130
 STREAM_DCI_CNP = 131
 
 
+def per_pod_array(value, n_pods: int, name: str = "parameter") -> np.ndarray:
+    """(n_pods,) f64 view of a scalar-or-per-pod topology parameter."""
+    a = np.asarray(value, dtype=np.float64).reshape(-1)
+    if a.size == 1:
+        return np.full(n_pods, a[0])
+    if a.size != n_pods:
+        raise ValueError(f"per-pod {name} has length {a.size}; expected a "
+                         f"scalar or one value per pod (n_pods={n_pods})")
+    return a
+
+
 def validate(net: NetworkParams, topo: TopologyParams) -> None:
     if topo.n_pods < 1:
         raise ValueError(f"n_pods={topo.n_pods} must be >= 1")
@@ -59,8 +70,13 @@ def validate(net: NetworkParams, topo: TopologyParams) -> None:
         raise ValueError(
             f"nodes per pod ({per_pod}) must be a multiple of "
             f"nodes_per_tor={net.nodes_per_tor} (pods align to ToRs)")
-    if topo.dci_oversubscription < 1.0:
+    if (per_pod_array(topo.dci_oversubscription, topo.n_pods,
+                      "dci_oversubscription") < 1.0).any():
         raise ValueError("dci_oversubscription must be >= 1")
+    bp = per_pod_array(topo.dci_burst_on_prob, topo.n_pods,
+                       "dci_burst_on_prob")
+    if ((bp < 0.0) | (bp > 1.0)).any():
+        raise ValueError("dci_burst_on_prob must lie in [0, 1]")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,10 +121,15 @@ def hier_geometry(net: NetworkParams, topo: TopologyParams,
 def dci_net_params(net: NetworkParams, topo: TopologyParams) -> NetworkParams:
     """The DCI burst process as a NetworkParams clone, so
     :func:`network.occupancy_trace` drives it unchanged (one "ToR" per
-    DCI uplink)."""
+    DCI uplink).  A per-pod ``dci_burst_on_prob`` vector broadcasts
+    through the burst draws (hot pods burst more often); scalars stay
+    scalars so the flat path is untouched."""
+    on = topo.dci_burst_on_prob
+    if np.ndim(on):
+        on = per_pod_array(on, topo.n_pods, "dci_burst_on_prob")
     return dataclasses.replace(
         net,
-        burst_on_prob=topo.dci_burst_on_prob,
+        burst_on_prob=on,
         burst_off_prob=topo.dci_burst_off_prob,
         burst_occupancy_lo=topo.dci_burst_occupancy_lo,
         burst_occupancy_hi=topo.dci_burst_occupancy_hi,
@@ -158,16 +179,26 @@ def overlay_rates(net: NetworkParams, topo: TopologyParams,
       by the ratio (the shared egress serializes pod traffic);
     - ``occ32`` is refreshed on cross columns so RoCE's PFC pause trace
       sees DCI congestion too.
+
+    A per-pod oversubscription vector charges each cross flow the max
+    of its two endpoint pods' ratios (the flow rides both uplinks); the
+    scalar form keeps the exact pre-vector arithmetic.
     """
     x = hg.cross
     if x.size == 0:
         return
     o = topo.dci_oversubscription
+    if np.ndim(o) == 0:
+        o32 = np.float32(o)
+    else:
+        ov = per_pod_array(o, topo.n_pods, "dci_oversubscription")
+        o32 = np.maximum(ov[hg.src_pod[x]],
+                         ov[hg.dst_pod[x]]).astype(np.float32)
     eff32 = occ_eff.astype(np.float32)
     occ32[:, x] = eff32
-    qd[:, x] = network.queue_delay_us(net, eff32) * np.float32(o)
+    qd[:, x] = network.queue_delay_us(net, eff32) * o32
     eff_rate[:, x] = (rate[:, x] * network.avail_bandwidth(net, eff32)
-                      / np.float32(o))
+                      / o32)
 
 
 def dci_cnp_draws(hg: HierGeometry, ecn_p: np.ndarray, cnp: np.ndarray,
@@ -199,13 +230,19 @@ def add_dci_latency(topo: TopologyParams, hg: HierGeometry,
 
 def hier_params(n_pods: int, *, base: SimParams | None = None,
                 n_nodes: int | None = None,
-                dci_oversubscription: float | None = None,
+                dci_oversubscription: "float | tuple | None" = None,
+                schedule: str | None = None,
                 **topo_kw) -> SimParams:
-    """A SimParams with the topology tier configured (convenience)."""
+    """A SimParams with the topology tier configured (convenience).
+    ``schedule`` selects the collective schedule ("ring" | "hier",
+    see :mod:`repro.core.transport.schedule`)."""
     p = base or SimParams()
     if n_nodes is not None:
         p = dataclasses.replace(p, net=dataclasses.replace(
             p.net, n_nodes=n_nodes))
+    if schedule is not None:
+        p = dataclasses.replace(p, work=dataclasses.replace(
+            p.work, schedule=schedule))
     kw = dict(n_pods=n_pods, **topo_kw)
     if dci_oversubscription is not None:
         kw["dci_oversubscription"] = dci_oversubscription

@@ -27,6 +27,16 @@ The gradient collective dispatches on
   step's ``drop_rate`` input is the ``(2,)`` axis vector
   ``[intra, cross]`` produced by ``coupling.AxisSchedules`` /
   ``HierStragglerModel``; the sync consumes ``drop_rate[-1]``.
+  This sync order mirrors the transport engine's
+  ``schedule.HierarchicalSchedule`` phase plan — intra-pod
+  reduce-scatter, then the lossy cross-pod DCI exchange, then
+  intra-pod all-gather — and ``make_train_step`` asserts against its
+  ``PHASE_ORDER`` so the two layers cannot drift apart silently.
+  Composing ``quantize_wire=True`` with this mode quantizes *only* the
+  cross-pod shards: the intra-pod pmean runs before the coded island's
+  encode/quantize stage, so in-pod sync stays full-precision f32 while
+  the DCI payload ships int8 (the bandwidth-starved hop is the only
+  one paying the precision cost).
 
 On jax >= 0.8 (``sharding.plain_lossy_island_supported``) the **lossy**
 mode also runs as a shard_map island with per-(peer, wire-row) masks
@@ -96,6 +106,11 @@ class CelerisConfig:
                                      # the Hadamard rotation (QSGD-style:
                                      # rotation whitens the per-row range
                                      # so one scale fits all peers).
+                                     # Under mode="hierarchical" only the
+                                     # cross-pod (DCI) psum is quantized —
+                                     # the intra-pod exact pmean happens
+                                     # before encode, so in-pod sync stays
+                                     # full precision.
 
     def collective_mode(self) -> CollectiveMode:
         if self.mode is not None:
@@ -254,6 +269,20 @@ def make_train_step(cfg: ModelConfig, mesh, opt_cfg: adamw.OptConfig,
             "hierarchical collective mode needs a 'pod' mesh axis "
             "(launch.mesh.make_pod_mesh / make_scale_mesh >= 512); "
             f"got dp axes {dp}")
+    if mode is CollectiveMode.HIERARCHICAL:
+        # contract with the transport engine's collective schedule: the
+        # sync below runs exact-intra first ('data' axes), then the
+        # coded lossy cross-pod psum ('pod' axis) — the same order as
+        # HierarchicalSchedule's phases (rs -> dci -> ag).  If the
+        # schedule's phase order ever changes, this mode's sync (and
+        # the [intra, cross] drop-vector convention) must change with
+        # it, so fail loudly instead of silently mismatching.
+        from repro.core.transport.schedule import HierarchicalSchedule
+        order = HierarchicalSchedule.PHASE_ORDER
+        assert order[0] == "rs" and order[-1] == "ag" and "dci" in order, (
+            f"CollectiveMode.HIERARCHICAL assumes intra-reduce -> DCI "
+            f"exchange -> intra-gather; HierarchicalSchedule.PHASE_ORDER "
+            f"is {order}")
 
     def _grads_one(params, batch, key, drop_rate):
         # the MoE all-to-all coin expects one scalar; hierarchical mode
