@@ -2,7 +2,7 @@
 
 Usage:
     python benchmarks/check_regression.py NEW.json [BASELINE.json]
-        [--tol 0.25]
+        [--tol 0.25] [--require-all]
 
 Compares every *simulation metric* key present in BOTH files and fails
 (exit 1) when any relative deviation exceeds ``--tol`` (default 25%).
@@ -10,6 +10,19 @@ Wall-clock / microsecond timing keys are machine-dependent and skipped;
 the simulation metrics (engine p99s, losses, drop rates, recovery
 fractions) are deterministic given seeds, so drift there means behavior
 changed.
+
+``--require-all`` hardens the missing-key rule: *every* non-volatile
+baseline key must be present in the new run — not just keys of tiers
+the new run demonstrably executed.  Without it, a whole tier silently
+disappearing (e.g. a smoke section that stopped emitting) shrinks the
+gate instead of failing it.  CI wires this into the smoke job by
+gating the fresh run against the committed baseline *restricted to the
+smoke tier* — so any committed ``smoke_*`` key the run no longer emits
+fails the build, while full-tier keys don't false-positive.
+
+Keys present in the new run but absent from the baseline are reported
+as a NEW-keys drift list (informational): that's the signal to commit
+a refreshed baseline so the new metrics become gated too.
 """
 import argparse
 import json
@@ -32,13 +45,16 @@ def _tier(key: str) -> str:
     return "smoke" if key.startswith("smoke_") else "full"
 
 
-def compare(new: dict, base: dict, tol: float):
-    """Returns (checked, failures, missing).
+def compare(new: dict, base: dict, tol: float, require_all: bool = False):
+    """Returns (checked, failures, missing, fresh).
 
-    ``missing`` lists baseline metrics of a tier the new run clearly
-    executed (it emitted other keys of that tier) that the new run no
-    longer emits — a silently-disappeared metric must fail the gate,
-    not shrink it.
+    ``missing`` lists baseline metrics the new run no longer emits — a
+    silently-disappeared metric must fail the gate, not shrink it.  By
+    default the rule is tier-scoped (only tiers the new run clearly
+    executed, i.e. emitted other keys of); ``require_all`` demands
+    every non-volatile baseline key unconditionally.  ``fresh`` lists
+    new-run metrics absent from the baseline (the drift report — new
+    keys awaiting a baseline refresh; informational, never fails).
     """
     checked, failures = [], []
     for key in sorted(set(new) & set(base)):
@@ -52,11 +68,16 @@ def compare(new: dict, base: dict, tol: float):
         checked.append((key, b, n, rel))
         if rel > tol:
             failures.append((key, b, n, rel))
-    new_tiers = {_tier(k) for k in new if not volatile(k)}
-    missing = [k for k in sorted(base)
-               if not volatile(k) and _tier(k) in new_tiers
-               and k not in new]
-    return checked, failures, missing
+    if require_all:
+        missing = [k for k in sorted(base)
+                   if not volatile(k) and k not in new]
+    else:
+        new_tiers = {_tier(k) for k in new if not volatile(k)}
+        missing = [k for k in sorted(base)
+                   if not volatile(k) and _tier(k) in new_tiers
+                   and k not in new]
+    fresh = [k for k in sorted(new) if not volatile(k) and k not in base]
+    return checked, failures, missing, fresh
 
 
 def main():
@@ -64,6 +85,10 @@ def main():
     ap.add_argument("new_json")
     ap.add_argument("baseline_json", nargs="?", default=_DEFAULT_BASELINE)
     ap.add_argument("--tol", type=float, default=0.25)
+    ap.add_argument("--require-all", action="store_true",
+                    help="fail when ANY non-volatile baseline key is "
+                         "missing from the new run (default: only keys "
+                         "of tiers the new run executed)")
     args = ap.parse_args()
     with open(args.new_json) as f:
         new = json.load(f)
@@ -71,7 +96,8 @@ def main():
         base = json.load(f)
     new_path, base_path, tol = args.new_json, args.baseline_json, args.tol
 
-    checked, failures, missing = compare(new, base, tol)
+    checked, failures, missing, fresh = compare(new, base, tol,
+                                                args.require_all)
     if not checked:
         sys.exit(f"no comparable keys between {new_path} and {base_path} "
                  "— baseline missing the tier that just ran?")
@@ -80,8 +106,12 @@ def main():
         print(f"{mark} {key}: baseline={b} new={n} rel={rel*100:.1f}%")
     for key in missing:
         print(f"GONE {key}: in baseline but not emitted by this run")
+    for key in fresh:
+        print(f"NEW  {key}: emitted by this run but not in the baseline "
+              "(commit a refreshed baseline to gate it)")
     print(f"\n{len(checked)} metrics checked, {len(failures)} over the "
-          f"{tol*100:.0f}% threshold, {len(missing)} disappeared")
+          f"{tol*100:.0f}% threshold, {len(missing)} disappeared, "
+          f"{len(fresh)} new")
     if failures or missing:
         sys.exit(1)
 

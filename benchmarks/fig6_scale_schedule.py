@@ -1,0 +1,152 @@
+"""Fig. 6 (beyond-paper): window policy x collective schedule at scale.
+
+The last closed-loop lever (ISSUE 5): the Celeris budget was per-round,
+so a hierarchical schedule's cheap in-pod steps and expensive DCI steps
+shared one deadline.  A per-round budget tight enough to control the
+tail truncates *from the end of the round*: whenever the DCI exchange
+runs long, the cut lands on the trailing all-gather phase and destroys
+intra-pod data that the fat in-pod fabric delivered perfectly well —
+the per-round budget drowns in DCI variance.  The per-phase window
+(``WindowPolicy("phase")``) splits the same budget across the
+schedule's phase blocks by their ``budget_frac`` weights (DCI phases
+weighted by oversubscription + extra RTT), so each tier is bounded by
+its own deadline: intra data survives, and residual loss concentrates
+on the cross-pod (DCI) axis — exactly where the trainer's
+``CollectiveMode.HIERARCHICAL`` coded recovery operates.
+
+The sweep: {ring, hier, perrail} schedules x {round, phase} windows at
+{128, 512, 1024} nodes x DCI oversubscription {2, 8}, 4 pods, via the
+engine's ``BatchedSimParams.schedules``/``windows`` dimensions (window
+policies share each cell's physics trace — only the budget assembly
+differs).  The Celeris budget follows the paper rule (RoCE median + 1
+sigma per schedule) tightened by ``TAIL_SCALE`` into the truncating
+regime where window policies actually bind.  Per cell: round p99,
+total data loss, and DCI-tier loss.
+
+Headlines (``fig6_*`` keys in ``BENCH_sim.json``):
+
+- ``fig6_loss_ratio_round_phase_hier_*`` — total data loss, per-round
+  over per-phase budget on the same hier schedule/fabric/budget
+  (> 1 means the phase window saves data at matched p99; the measured
+  win is 2-4x at 512-1024 nodes);
+- ``fig6_p99_ratio_ring_hier_round_*`` — the hier-schedule win itself,
+  now measured at 512/1024 nodes;
+- ``fig6_p99_ms_perrail_*`` — the per-rail exchange's tail (its
+  m-fold smaller DCI shards cut the leader bottleneck).
+
+Smoke tier (CI): 32-node 2-pod {hier, perrail} x {round, phase} A/B,
+a few seconds, ``smoke_fig6``-prefixed keys.
+"""
+import time
+
+import numpy as np
+
+from repro.core.transport import (BatchedSimParams, NetworkParams, SimParams,
+                                  sweep, topology)
+
+NODES = (128, 512, 1024)
+OVERSUBS = (2.0, 8.0)
+SCHEDULES = ("ring", "hier", "perrail")
+WINDOWS = ("round", "phase")
+N_PODS = 4
+# budget tightening into the truncating tail regime (paper rule x this)
+TAIL_SCALE = 0.25
+SMOKE_TAIL_SCALE = 0.4
+
+# 32-node smoke fabric: same burst-rate downscale the tier-1 transport
+# tests use; the DCI tier keeps its (much busier) defaults.
+SMOKE_PARAMS = SimParams(net=NetworkParams(n_nodes=32,
+                                           burst_on_prob=0.0008))
+
+
+def _emit_cell(rows, prefix, st, sched, win, tag):
+    rows.append((f"{prefix}_p99_ms_{sched}_{win}_{tag}",
+                 round(st.p99 / 1e3, 2), None))
+    rows.append((f"{prefix}_loss_{sched}_{win}_{tag}",
+                 round(st.mean_loss, 4), None))
+    rows.append((f"{prefix}_dci_loss_{sched}_{win}_{tag}",
+                 round(st.tier_loss("dci"), 4), None))
+
+
+def run(n_rounds=60, seed=0, smoke=False, prefix="fig6", n_nodes=NODES):
+    rows = []
+
+    if smoke:
+        print("\n== Fig. 6 smoke: 2-pod 32-node {hier, perrail} x "
+              "{round, phase} windows (tight budget) ==")
+        res = sweep(BatchedSimParams(
+            n_nodes=(32,), seeds=(seed,), n_pods=(2,),
+            schedules=("hier", "perrail"), windows=WINDOWS,
+            designs=("roce", "celeris"), n_rounds=40,
+            timeout_scale=SMOKE_TAIL_SCALE,
+            base=topology.hier_params(2, base=SMOKE_PARAMS,
+                                      dci_oversubscription=8.0)))
+        cel = {}
+        for sched in ("hier", "perrail"):
+            for win in WINDOWS:
+                st = res.stats[("celeris", 32, 25.0, seed, 2, sched, win)]
+                cel[(sched, win)] = st
+                _emit_cell(rows, prefix, st, sched, win, "p2_o8")
+                print(f"{sched:8s} {win:6s} p99 {st.p99/1e3:8.2f} ms  "
+                      f"loss {st.mean_loss*100:6.2f}%  "
+                      f"dci loss {st.tier_loss('dci')*100:6.2f}%")
+        rows.append((f"{prefix}_loss_ratio_round_phase",
+                     round(max(cel[('hier', 'round')].mean_loss, 1e-4)
+                           / max(cel[('hier', 'phase')].mean_loss, 1e-4),
+                           3), None))
+        return rows
+
+    t0 = time.perf_counter()
+    print(f"\n== Fig. 6: schedule x window policy at scale "
+          f"({N_PODS} pods, {len(n_nodes)} scales x oversub {OVERSUBS}, "
+          f"budget = paper rule x {TAIL_SCALE}) ==")
+    print(f"{'nodes':>6s} {'oversub':>8s} {'sched':>8s} "
+          f"{'round p99':>10s} {'phase p99':>10s} "
+          f"{'round loss%':>12s} {'phase loss%':>12s} "
+          f"{'round dci%':>11s} {'phase dci%':>11s}")
+    for ov in OVERSUBS:
+        res = sweep(
+            BatchedSimParams(
+                n_nodes=tuple(n_nodes), seeds=(seed,), n_pods=(N_PODS,),
+                schedules=SCHEDULES, windows=WINDOWS,
+                designs=("roce", "celeris"), n_rounds=n_rounds,
+                timeout_scale=TAIL_SCALE,
+                base=topology.hier_params(N_PODS,
+                                          dci_oversubscription=ov)),
+            progress=lambda msg: print(f"  [fig6 o={ov:.0f}] {msg}",
+                                       flush=True))
+        for nn in n_nodes:
+            tag = f"n{nn}_o{int(ov)}"
+            cel = {}
+            for sched in SCHEDULES:
+                for win in WINDOWS:
+                    st = res.stats[("celeris", nn, 25.0, seed, N_PODS,
+                                    sched, win)]
+                    cel[(sched, win)] = st
+                    _emit_cell(rows, prefix, st, sched, win, tag)
+                r, p = cel[(sched, "round")], cel[(sched, "phase")]
+                print(f"{nn:6d} {ov:8.0f} {sched:>8s} "
+                      f"{r.p99/1e3:10.2f} {p.p99/1e3:10.2f} "
+                      f"{r.mean_loss*100:12.2f} {p.mean_loss*100:12.2f} "
+                      f"{r.tier_loss('dci')*100:11.2f} "
+                      f"{p.tier_loss('dci')*100:11.2f}")
+            # headline ratios: the schedule win under the tight budget,
+            # and the data the per-phase budget saves on top of it
+            rows.append((
+                f"{prefix}_p99_ratio_ring_hier_round_{tag}",
+                round(cel[("ring", "round")].p99
+                      / cel[("hier", "round")].p99, 3), None))
+            for sched in ("hier", "perrail"):
+                rows.append((
+                    f"{prefix}_loss_ratio_round_phase_{sched}_{tag}",
+                    round(max(cel[(sched, "round")].mean_loss, 1e-4)
+                          / max(cel[(sched, "phase")].mean_loss, 1e-4),
+                          3), None))
+
+    rows.append((f"{prefix}_wall_s",
+                 round(time.perf_counter() - t0, 1), None))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

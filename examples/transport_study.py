@@ -27,18 +27,24 @@ def main():
                     help="hierarchical topology: per-tier loss and the "
                          "axis-split drop schedule vs pod count and DCI "
                          "oversubscription")
-    ap.add_argument("--schedule", choices=("ring", "hier"), default="ring",
+    ap.add_argument("--schedule", choices=("ring", "hier", "perrail"),
+                    default="ring",
                     help="collective schedule riding the fabric in "
-                         "--multi-pod: flat ring vs hierarchical "
-                         "RS/AG + DCI leader exchange "
-                         "(core/transport/schedule.py)")
+                         "--multi-pod: flat ring, hierarchical RS/AG + "
+                         "DCI leader exchange, or per-rail all-node "
+                         "exchange (core/transport/schedule.py)")
+    ap.add_argument("--window", choices=("round", "phase"), default="round",
+                    help="Celeris window policy in --multi-pod: one "
+                         "deadline per round, or the budget split across "
+                         "the schedule's phase blocks by budget_frac "
+                         "(params.WindowPolicy)")
     ap.add_argument("--nodes", type=int, default=128)
     args = ap.parse_args()
 
     sim = CollectiveSimulator(SimParams())
 
     if args.multi_pod:
-        print(f"schedule={args.schedule}")
+        print(f"schedule={args.schedule} window={args.window}")
         print(f"{'pods':>5s} {'oversub':>8s} {'p99 ms':>8s} "
               + "".join(f"{'loss% ' + t:>12s}" for t in TIERS)
               + f" {'sched intra/cross %':>20s}")
@@ -48,7 +54,8 @@ def main():
                                 dci_oversubscription=ov,
                                 schedule=args.schedule)
                 cel = hier_protocol(p, n_rounds=args.rounds,
-                                    seed=args.seed)["celeris"]
+                                    seed=args.seed,
+                                    window=args.window)["celeris"]
                 sched = coupling.split_schedule_from_round_stats(cel)
                 print(f"{npods:5d} {ov:8.0f} {cel.p99/1e3:8.2f} "
                       + "".join(f"{cel.tier_loss(t)*100:12.3f}"

@@ -1,6 +1,6 @@
 from repro.core.transport.params import (
     SimParams, NetworkParams, DcqcnParams, ReliabilityParams, WorkloadParams,
-    TopologyParams)
+    TopologyParams, WindowPolicy)
 from repro.core.transport.engine import (
     BatchedEngine, BatchedSimParams, RoundStats, SweepResult, sweep)
 from repro.core.transport.simulator import CollectiveSimulator
@@ -8,8 +8,9 @@ from repro.core.transport.designs import DESIGNS
 from repro.core.transport.topology import (
     TIERS, hier_params, hier_protocol)
 from repro.core.transport.schedule import (
-    SCHEDULES, CollectiveSchedule, HierarchicalSchedule, RingSchedule,
-    SchedulePhase, SchedulePlan, get_schedule, make_plan)
+    SCHEDULES, CollectiveSchedule, HierarchicalSchedule,
+    PerRailHierarchicalSchedule, RingSchedule, SchedulePhase, SchedulePlan,
+    get_schedule, make_plan)
 from repro.core.transport.coupling import (
     AxisSchedules, CollectiveMode, DropSchedule, EngineStragglerModel,
     HierStragglerModel, LatencyTail, closed_form_schedule,
@@ -18,12 +19,13 @@ from repro.core.transport.coupling import (
 
 __all__ = [
     "SimParams", "NetworkParams", "DcqcnParams", "ReliabilityParams",
-    "WorkloadParams", "TopologyParams", "CollectiveSimulator", "RoundStats",
+    "WorkloadParams", "TopologyParams", "WindowPolicy",
+    "CollectiveSimulator", "RoundStats",
     "DESIGNS", "TIERS", "BatchedEngine", "BatchedSimParams", "SweepResult",
     "sweep", "hier_params", "hier_protocol",
     "SCHEDULES", "CollectiveSchedule", "HierarchicalSchedule",
-    "RingSchedule", "SchedulePhase", "SchedulePlan", "get_schedule",
-    "make_plan",
+    "PerRailHierarchicalSchedule", "RingSchedule", "SchedulePhase",
+    "SchedulePlan", "get_schedule", "make_plan",
     "AxisSchedules", "CollectiveMode", "DropSchedule", "EngineStragglerModel",
     "HierStragglerModel", "LatencyTail", "closed_form_schedule",
     "schedule_from_engine", "schedule_from_round_stats",

@@ -30,6 +30,17 @@ axis (ToR + spine tiers) and one for the cross-pod DCI axis — via
 :func:`split_schedule_from_round_stats` / :func:`split_schedule_from_engine`;
 :class:`HierStragglerModel` walks the pair and feeds the trainer a
 ``(2,)`` drop vector per step (``[intra, cross]``).
+
+When the engine tracked *per-pod* delivered fractions
+(``RoundStats.pod_recv_frac``, any multi-pod shared-fabric run), the
+split refines into a per-pod vector: ``AxisSchedules.per_pod`` holds
+one intra :class:`DropSchedule` per pod and ``rates(step)`` returns
+``(n_pods + 1,)`` — ``[intra_pod0, ..., intra_podK, cross]`` — which
+the hierarchical train step consumes per pod (each pod's DCI
+contribution rides its own pod fabric first, so its arrival mask
+combines its pod's intra rate with the shared cross rate).  The
+2-element ``[intra, cross]`` form remains for flat aggregates and
+older stats.
 """
 from __future__ import annotations
 
@@ -200,15 +211,29 @@ class AxisSchedules:
     """Per-mesh-axis drop schedules for a hierarchical topology.
 
     ``intra`` covers the in-pod fabric (ToR + spine tiers combined,
-    weighted by flow count); ``cross`` covers the DCI tier.  The trainer
-    consumes them as a ``(2,)`` vector per step (``[intra, cross]``)
+    weighted by the plan's per-tier packet exposure); ``cross`` covers
+    the DCI tier.  When the engine tracked per-pod fractions,
+    ``per_pod`` refines ``intra`` into one schedule per pod and
+    :meth:`rates` returns the ``(n_pods + 1,)`` vector
+    ``[intra_pod0, ..., intra_podK, cross]``; otherwise the ``(2,)``
+    ``[intra, cross]`` form.  Either way the *cross* component is the
+    last element — the convention the hierarchical train step and the
+    MoE loss coin key on.  The trainer consumes the vector per step
     through :class:`HierStragglerModel`.
     """
     intra: DropSchedule
     cross: DropSchedule
+    per_pod: tuple | None = None       # of DropSchedule, one per pod
     source: str = ""
 
+    @property
+    def n_pods(self) -> int | None:
+        return None if self.per_pod is None else len(self.per_pod)
+
     def rates(self, step: int) -> np.ndarray:
+        if self.per_pod is not None:
+            return np.array([s.rate(step) for s in self.per_pod]
+                            + [self.cross.rate(step)])
         return np.array([self.intra.rate(step), self.cross.rate(step)])
 
     # schedule-walk interface shared with DropSchedule, so the straggler
@@ -233,6 +258,13 @@ def split_schedule_from_round_stats(stats: RoundStats, *,
     phases weigh tor/spine by what they really carried.  Older stats
     without ``tier_pkts`` fall back to the static flow-count heuristic.
     Empty tiers contribute nothing (their fraction is reported as 1).
+
+    When the stats carry per-pod fractions (``pod_recv_frac``, any
+    multi-pod engine assembly) the returned schedules also carry
+    ``per_pod`` — one intra schedule per pod, whose
+    ``pod_pkts``-weighted mean recombines to the aggregate intra rate
+    exactly (same delivered packets, regrouped by pod instead of by
+    tier).
     """
     if stats.tier_recv_frac is None or stats.tier_counts is None:
         raise ValueError(
@@ -249,10 +281,16 @@ def split_schedule_from_round_stats(stats: RoundStats, *,
         intra = np.zeros(f.shape[0])
     cross = (1.0 - f[:, 2]) if w[2] > 0 else np.zeros(f.shape[0])
     tag = source or f"engine:{stats.design}"
+    per_pod = None
+    if stats.pod_recv_frac is not None:
+        pf = np.asarray(stats.pod_recv_frac, dtype=np.float64)
+        per_pod = tuple(
+            DropSchedule(rates=1.0 - pf[:, p], source=f"{tag}:pod{p}")
+            for p in range(pf.shape[1]))
     return AxisSchedules(
         intra=DropSchedule(rates=intra, source=tag + ":intra"),
         cross=DropSchedule(rates=cross, source=tag + ":cross"),
-        source=tag)
+        per_pod=per_pod, source=tag)
 
 
 def split_schedule_from_engine(n_rounds: int, seed: int = 0, *,
@@ -262,6 +300,7 @@ def split_schedule_from_engine(n_rounds: int, seed: int = 0, *,
                                dci_oversubscription: "float | tuple | None"
                                = None,
                                schedule: str | None = None,
+                               window: str = "round",
                                timeout_scale: float = 1.0) -> AxisSchedules:
     """Run the hierarchical engine and derive the axis-split schedule.
 
@@ -270,16 +309,21 @@ def split_schedule_from_engine(n_rounds: int, seed: int = 0, *,
     scaled), but on the multi-pod fabric, so the returned pair reflects
     where in the hierarchy the loss actually happened.  ``schedule``
     selects the collective schedule riding that fabric ("ring" |
-    "hier"): with "hier" the cross axis reflects the DCI leader
-    exchange's big shards rather than per-hop ring slices.
+    "hier" | "perrail"): the hierarchical plans' cross axis reflects
+    the DCI exchange's shards rather than per-hop ring slices.
+    ``window`` selects the Celeris budget policy ("round" | "phase") —
+    with "phase" the per-pod/per-tier loss reflects each phase block's
+    own deadline.  The result always carries ``per_pod`` schedules
+    (multi-pod engine runs track per-pod fractions).
     """
     p = topology.hier_params(n_pods, base=params, n_nodes=n_nodes,
                              dci_oversubscription=dci_oversubscription,
                              schedule=schedule)
-    stats = topology.hier_protocol(p, n_rounds, seed,
+    stats = topology.hier_protocol(p, n_rounds, seed, window=window,
                                    timeout_scale=timeout_scale)["celeris"]
     tag = (f"engine:celeris n={p.net.n_nodes} pods={n_pods} "
-           f"sched={p.work.schedule} seed={seed} scale={timeout_scale}")
+           f"sched={p.work.schedule} window={window} seed={seed} "
+           f"scale={timeout_scale}")
     return split_schedule_from_round_stats(stats, source=tag)
 
 
@@ -348,9 +392,11 @@ class HierStragglerModel(EngineStragglerModel):
     Same schedule walk as :class:`EngineStragglerModel` (the
     ``schedule.rate(step)`` interface is shared by
     :class:`DropSchedule` and :class:`AxisSchedules`), but holding an
-    :class:`AxisSchedules`, so ``drop_rate`` returns the ``(2,)``
-    per-axis vector the hierarchical train step consumes
-    (``[intra, cross]``).
+    :class:`AxisSchedules`, so ``drop_rate`` returns the per-axis
+    vector the hierarchical train step consumes: ``(n_pods + 1,)``
+    ``[intra_pod0, ..., intra_podK, cross]`` when the stats tracked
+    per-pod fractions, else the ``(2,)`` ``[intra, cross]`` aggregate.
+    The cross (DCI) component is the last element in both forms.
     """
 
     @property

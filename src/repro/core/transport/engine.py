@@ -73,7 +73,7 @@ import numpy as np
 from repro.core import timeout as timeout_mod
 from repro.core.transport import dcqcn, designs, network, replay, topology
 from repro.core.transport import schedule as schedule_mod
-from repro.core.transport.params import SimParams
+from repro.core.transport.params import SimParams, WindowPolicy
 
 # Engine-native random sub-streams, all derived from the user seed.
 # (The per-step simulator interleaved every draw into one stream; the
@@ -100,6 +100,31 @@ def _tier_frac(got: np.ndarray, tot: np.ndarray) -> np.ndarray:
     return np.where(tot > 0, got / np.maximum(tot, 1.0), 1.0)
 
 
+def _cut_block(nat_b, deliv_b, budget_us, groups):
+    """Apply one deadline to a contiguous run of steps.
+
+    The one truncation rule every window policy shares: elapsed time is
+    ``min(sum(nat), budget)``; packets delivered strictly inside the
+    deadline count in full and the boundary step earns linear partial
+    credit.  ``groups`` are (steps, G) per-group delivered arrays
+    (tiers, pods) that take the same cut.  Returns ``(elapsed, got,
+    group_gots)``.  The round window is this applied to the whole
+    round; the phase window applies it per phase block with the
+    plan's ``budget_frac`` split.
+    """
+    cum = np.cumsum(nat_b)
+    total_t = cum[-1]
+    if total_t <= budget_us:
+        return total_t, deliv_b.sum(), [g.sum(axis=0) for g in groups]
+    done = cum <= budget_us
+    bidx = int(np.argmax(~done))
+    prev = float(cum[bidx - 1]) if bidx > 0 else 0.0
+    part = (budget_us - prev) / max(nat_b[bidx], 1e-9)
+    got = deliv_b[done].sum() + deliv_b[bidx] * part
+    return budget_us, got, [(g * done[:, None]).sum(0) + g[bidx] * part
+                            for g in groups]
+
+
 @dataclasses.dataclass
 class RoundStats:
     times_us: np.ndarray          # (rounds,)
@@ -114,6 +139,11 @@ class RoundStats:
     # schedule's actual per-tier exposure (steps x flows x pkts), which
     # the axis-split coupling uses as its weighting
     tier_pkts: np.ndarray | None = None
+    # per-pod intra fractions over the hierarchy (rounds, n_pods) plus
+    # the (n_pods,) offered intra packets per round per pod — the
+    # per-pod axis-split coupling's inputs (None on flat topologies)
+    pod_recv_frac: np.ndarray | None = None
+    pod_pkts: np.ndarray | None = None
 
     @property
     def p50(self) -> float:
@@ -172,6 +202,20 @@ class StepTrace:
     tier_cols: tuple | None = None
     tier_counts: np.ndarray | None = None       # (n_tiers,) flows per tier
     tier_pkts_round: np.ndarray | None = None   # (n_tiers,) offered/round
+    # static plan facts for the window policies: in-round phase index
+    # per step, normalized per-phase budget split, and per-phase sender
+    # nodes / flow→tier columns (the multi-phase step window's scatter
+    # map).  Single-phase plans carry the degenerate one-phase versions.
+    phase_of_step: np.ndarray | None = None     # (steps_per_round,)
+    phase_budget_frac: np.ndarray | None = None # (n_phases,) sums to 1
+    phase_src: tuple | None = None              # per phase: sender nodes
+    phase_tier_cols: tuple | None = None        # per phase: per-tier cols
+    phase_pod_cols: tuple | None = None         # per phase: per-pod cols
+    # per-pod intra reductions (T, n_pods), multi-pod topologies only;
+    # ``pod_pkts_round`` is (n_pods,) offered intra packets per round
+    pod_deliv: np.ndarray | None = None
+    pod_total: np.ndarray | None = None
+    pod_pkts_round: np.ndarray | None = None
 
 
 class BatchedEngine:
@@ -197,8 +241,12 @@ class BatchedEngine:
         return geo
 
     def _new_traces(self, design_list, T, steps, n, per_node_for,
-                    tier_cols=None, tier_counts=None, tier_pkts_round=None):
+                    tier_cols=None, tier_counts=None, tier_pkts_round=None,
+                    phase_of_step=None, phase_budget_frac=None,
+                    phase_src=None, phase_tier_cols=None,
+                    phase_pod_cols=None, n_pods=0, pod_pkts_round=None):
         track = tier_counts is not None
+        pods = n_pods > 1
         out: Dict[str, StepTrace] = {}
         for d in design_list:
             keep = d in per_node_for
@@ -212,7 +260,14 @@ class BatchedEngine:
                 tier_deliv=np.empty((T, topology.N_TIERS)) if track else None,
                 tier_total=np.empty((T, topology.N_TIERS)) if track else None,
                 tier_cols=tier_cols, tier_counts=tier_counts,
-                tier_pkts_round=tier_pkts_round)
+                tier_pkts_round=tier_pkts_round,
+                phase_of_step=phase_of_step,
+                phase_budget_frac=phase_budget_frac,
+                phase_src=phase_src, phase_tier_cols=phase_tier_cols,
+                phase_pod_cols=phase_pod_cols,
+                pod_deliv=np.zeros((T, n_pods)) if pods else None,
+                pod_total=np.zeros((T, n_pods)) if pods else None,
+                pod_pkts_round=pod_pkts_round if pods else None)
         return out
 
     @staticmethod
@@ -230,13 +285,16 @@ class BatchedEngine:
 
     @staticmethod
     def _phase_reduce_into(tr: StepTrace, rows: np.ndarray, src: np.ndarray,
-                           tier_cols: tuple, res) -> None:
+                           tier_cols: tuple, res,
+                           pod_cols: tuple | None = None) -> None:
         """Scatter one schedule phase's transfer results into the trace.
 
         ``rows`` are the phase's absolute step indices, ``src`` its
-        sender nodes (the per-node scatter columns) and ``tier_cols``
-        its flow→tier column sets.  On a single-phase (ring) plan this
-        reduces to exactly :meth:`_reduce_into` over the block slice.
+        sender nodes (the per-node scatter columns), ``tier_cols`` its
+        flow→tier column sets, and ``pod_cols`` (multi-pod only) its
+        per-pod intra-flow column sets.  On a single-phase (ring) plan
+        this reduces to exactly :meth:`_reduce_into` over the block
+        slice.
         """
         tr.nat_us[rows] = res.time_us.max(axis=-1)
         tr.deliv[rows] = res.delivered_pkts.sum(axis=-1)
@@ -246,6 +304,11 @@ class BatchedEngine:
                 tr.tier_deliv[rows, k] = (
                     res.delivered_pkts[..., cols].sum(axis=-1))
                 tr.tier_total[rows, k] = res.total_pkts[..., cols].sum(axis=-1)
+        if tr.pod_deliv is not None and pod_cols is not None:
+            for p, cols in enumerate(pod_cols):
+                tr.pod_deliv[rows, p] = (
+                    res.delivered_pkts[..., cols].sum(axis=-1))
+                tr.pod_total[rows, p] = res.total_pkts[..., cols].sum(axis=-1)
         if tr.node_time_us is not None:
             tr.node_time_us[np.ix_(rows, src)] = res.time_us
             tr.node_deliv[np.ix_(rows, src)] = res.delivered_pkts
@@ -374,11 +437,16 @@ class BatchedEngine:
                                     dtype=np.float32)
 
         tier_counts = g["hier"].tier_counts
+        plan: schedule_mod.SchedulePlan = g["plan"]   # single-phase ring
         out = self._new_traces(design_list, T, steps, n, per_node_for,
                                tier_cols=g["hier"].tier_cols,
                                tier_counts=tier_counts,
                                tier_pkts_round=tier_counts
-                               * float(n_pkts * steps))
+                               * float(n_pkts * steps),
+                               phase_of_step=plan.phase_of_step,
+                               phase_budget_frac=plan.budget_fracs(),
+                               phase_src=(plan.phases[0].src,),
+                               phase_tier_cols=(g["hier"].tier_cols,))
         if need_clean:
             qd_clean = network.queue_delay_us(net, occ_clean32)
             avail_clean = network.avail_bandwidth(net, occ_clean32)
@@ -501,11 +569,20 @@ class BatchedEngine:
         ph_steps = [np.flatnonzero(plan.phase_of_step == k)
                     for k in range(len(plan.phases))]
 
+        ph_pod_cols = ([hg.pod_cols for hg in hgs] if hier else None)
         out = self._new_traces(
             design_list, T, steps, n, per_node_for,
             tier_cols=hgs[0].tier_cols if plan.single_phase else None,
             tier_counts=plan.tier_counts(net, p.topo, hgs),
-            tier_pkts_round=plan.tier_pkts_round(net, p.topo, hgs))
+            tier_pkts_round=plan.tier_pkts_round(net, p.topo, hgs),
+            phase_of_step=plan.phase_of_step,
+            phase_budget_frac=plan.budget_fracs(),
+            phase_src=tuple(ph.src for ph in plan.phases),
+            phase_tier_cols=tuple(hg.tier_cols for hg in hgs),
+            phase_pod_cols=tuple(ph_pod_cols) if hier else None,
+            n_pods=p.topo.n_pods if hier else 0,
+            pod_pkts_round=(plan.pod_pkts_round(net, p.topo, hgs)
+                            if hier else None))
         for t0 in range(0, T, block_steps):
             tb = min(block_steps, T - t0)   # whole rounds: steps | tb
             u = fabric_gen.random((tb, network._ADVANCE_DRAWS, n_tors))
@@ -573,17 +650,32 @@ class BatchedEngine:
                                            transfer_gens[d])
                     if hier:
                         topology.add_dci_latency(p.topo, hgs[k], res.time_us)
-                    self._phase_reduce_into(out[d], t0 + rows, ph.src,
-                                            hgs[k].tier_cols, res)
+                    self._phase_reduce_into(
+                        out[d], t0 + rows, ph.src, hgs[k].tier_cols, res,
+                        pod_cols=ph_pod_cols[k] if hier else None)
         return out
 
     # ------------------------------------------------------------------
     def assemble(self, trace: StepTrace, seed: int, *,
                  celeris_timeout_us: float | None = None,
-                 adaptive: bool = True, window: str = "round") -> RoundStats:
+                 adaptive: bool = True,
+                 window: "str | WindowPolicy" = "round") -> RoundStats:
         """Apply round structure (and, for Celeris, bounded windows) to a
         step trace.  Sequential only across rounds, and only when the
-        adaptive controller is on."""
+        adaptive controller is on.
+
+        ``window`` is a :class:`~repro.core.transport.params
+        .WindowPolicy` (or its kind string): ``"round"`` is one
+        deadline per round (bit-exact with the pre-policy engine),
+        ``"phase"`` splits the same budget across the collective
+        schedule's phase blocks by their ``budget_frac`` weights, and
+        ``"step"`` divides each phase's share uniformly over its steps
+        (per-flow data required).  On a single-phase (ring) plan all
+        three policies see the identical ``[1.0]`` split, so "phase"
+        degenerates to "round" and "step" to the pre-policy per-step
+        window, bit-for-bit.
+        """
+        window = WindowPolicy.parse(window).kind
         steps = trace.steps_per_round
         R = trace.nat_us.shape[0] // steps
         nat = trace.nat_us.reshape(R, steps)
@@ -591,41 +683,121 @@ class BatchedEngine:
         total = trace.total.reshape(R, steps)
         tot_sum = np.maximum(total.sum(axis=1), 1.0)
 
-        t_deliv = t_total = None
+        # accounting groups riding the window cut: tiers, then pods
+        t_deliv = t_total = p_deliv = p_total = None
+        groups = []             # (R, steps, G) delivered/total pairs
         if trace.tier_deliv is not None:
             t_deliv = trace.tier_deliv.reshape(R, steps, -1)
             t_total = trace.tier_total.reshape(R, steps, -1)
+            groups.append((t_deliv, t_total))
+        if trace.pod_deliv is not None:
+            p_deliv = trace.pod_deliv.reshape(R, steps, -1)
+            p_total = trace.pod_total.reshape(R, steps, -1)
+            groups.append((p_deliv, p_total))
         tier_kw = dict(tier_counts=trace.tier_counts,
-                       tier_pkts=trace.tier_pkts_round)
+                       tier_pkts=trace.tier_pkts_round,
+                       pod_pkts=trace.pod_pkts_round)
+
+        def _pack(times, fracs, group_fracs, design=trace.design):
+            gf = list(group_fracs)
+            tf = gf.pop(0) if t_deliv is not None else None
+            pf = gf.pop(0) if p_deliv is not None else None
+            return RoundStats(times_us=times, recv_frac=fracs,
+                              design=design, tier_recv_frac=tf,
+                              pod_recv_frac=pf, **tier_kw)
 
         if trace.design != "celeris":
-            tf = None
-            if t_deliv is not None:
-                tf = _tier_frac(t_deliv.sum(axis=1), t_total.sum(axis=1))
-            return RoundStats(times_us=nat.sum(axis=1),
-                              recv_frac=deliv.sum(axis=1) / tot_sum,
-                              design=trace.design,
-                              tier_recv_frac=tf, **tier_kw)
+            return _pack(nat.sum(axis=1), deliv.sum(axis=1) / tot_sum,
+                         [_tier_frac(gd.sum(axis=1), gt.sum(axis=1))
+                          for gd, gt in groups])
 
         if window == "step" and trace.node_time_us is None:
             raise ValueError(
                 "window='step' needs per-flow data: build the trace with "
                 "traces(..., per_node_for=('celeris',)) or use "
                 "BatchedEngine.run(), which sets it up")
-        if window == "step" and t_deliv is not None and trace.tier_cols is None:
+
+        # per-phase structure: in-round step rows, sender nodes, and
+        # column maps per phase.  Traces without plan metadata (built
+        # outside the engine) degenerate to one phase covering the
+        # round — exactly the old single-phase behavior.
+        if trace.phase_of_step is not None:
+            ph_rows = [np.flatnonzero(trace.phase_of_step == k)
+                       for k in range(trace.phase_budget_frac.size)]
+            ph_frac = trace.phase_budget_frac
+            ph_src = trace.phase_src
+            ph_tier_cols = trace.phase_tier_cols
+            ph_pod_cols = trace.phase_pod_cols
+        else:
+            ph_rows = [np.arange(steps)]
+            ph_frac = np.ones(1)
+            ph_src = None
+            ph_tier_cols = ((trace.tier_cols,)
+                            if trace.tier_cols is not None else None)
+            ph_pod_cols = None
+        multi_phase = len(ph_rows) > 1
+        if window == "step" and multi_phase and ph_src is None:
             raise ValueError(
-                "window='step' tier accounting needs a single-phase (ring) "
-                "schedule: a multi-phase plan has no static node→tier map")
+                "window='step' on a multi-phase plan needs the trace's "
+                "per-phase sender maps (engine-built traces carry them)")
+        if window == "step":
+            # per-group column maps, aligned one-to-one with ``groups``
+            # (the cut accounting below indexes them in lockstep): a
+            # tracked group whose flow→column map is missing cannot be
+            # attributed per step — fail with intent, not an IndexError
+            step_col_maps = []
+            for present, ph_cols, what in (
+                    (t_deliv is not None, ph_tier_cols, "flow→tier"),
+                    (p_deliv is not None, ph_pod_cols, "flow→pod")):
+                if not present:
+                    continue
+                if ph_cols is None:
+                    raise ValueError(
+                        f"window='step' {what} accounting needs the "
+                        "plan's per-phase flow maps (engine-built "
+                        "traces carry them)")
+                step_col_maps.append(ph_cols)
+
+        def _node_cols(k, cols):
+            # a phase's flow columns → node columns in the (T, n) arrays
+            return cols if ph_src is None else ph_src[k][cols]
+
+        def _step_window_round(r, budget_us):
+            """Per-step deadlines for round ``r``: each phase's budget
+            share divided uniformly over its steps."""
+            step_to = np.empty(steps)
+            for k, rows in enumerate(ph_rows):
+                step_to[rows] = budget_us * ph_frac[k] / rows.size
+            t_node = trace.node_time_us[r * steps: (r + 1) * steps]
+            d_node = trace.node_deliv[r * steps: (r + 1) * steps]
+            late = np.clip((t_node - step_to[:, None])
+                           / np.maximum(t_node, 1e-9), 0, 1)
+            time_r = np.minimum(nat[r], step_to).sum()
+            got_node = d_node * (1 - late)
+            gots = []
+            for ph_cols in step_col_maps:
+                got_g = np.zeros(len(ph_cols[0]))
+                for k, rows in enumerate(ph_rows):
+                    for j, cols in enumerate(ph_cols[k]):
+                        if cols.size:
+                            got_g[j] += got_node[
+                                np.ix_(rows, _node_cols(k, cols))].sum()
+                gots.append(got_g)
+            return time_r, got_node.sum(), gots
 
         init_to = (celeris_timeout_us or 50_000.0) / 1e6
         cfg = timeout_mod.TimeoutConfig(
             init_timeout=init_to, min_timeout=init_to * 0.25,
             max_timeout=init_to * 8.0, alpha=0.25)
 
-        if window == "round" and not adaptive:
-            return self._assemble_round_window_fixed(
-                trace, nat, deliv, tot_sum, init_to * 1e6,
-                t_deliv, t_total, tier_kw)
+        if not adaptive and window == "round":
+            return _pack(*self._assemble_round_window_fixed(
+                nat, deliv, tot_sum, init_to * 1e6, groups),
+                design="celeris")
+        if not adaptive and window == "phase":
+            return _pack(*self._assemble_phase_window_fixed(
+                nat, deliv, tot_sum, init_to * 1e6, groups, ph_rows,
+                ph_frac), design="celeris")
 
         rng = np.random.default_rng([seed, _STREAM_WINDOW])
         n = self.p.net.n_nodes
@@ -633,44 +805,35 @@ class BatchedEngine:
         smoothed = np.full(n, cfg.init_timeout)
         times = np.zeros(R)
         fracs = np.ones(R)
-        t_fracs = (np.ones((R, topology.N_TIERS))
-                   if t_deliv is not None else None)
+        g_fracs = [np.ones((R, gd.shape[2])) for gd, _ in groups]
+        g_tot = [gt.sum(axis=1) for _, gt in groups]
 
-        cum = np.cumsum(nat, axis=1)
         for r in range(R):
             budget_us = timeout * 1e6
             if window == "step":
-                step_to = budget_us / steps
-                t_node = trace.node_time_us[r * steps: (r + 1) * steps]
-                d_node = trace.node_deliv[r * steps: (r + 1) * steps]
-                late = np.clip((t_node - step_to)
-                               / np.maximum(t_node, 1e-9), 0, 1)
-                times[r] = np.minimum(nat[r], step_to).sum()
-                got_node = d_node * (1 - late)
-                fracs[r] = got_node.sum() / tot_sum[r]
-                if t_fracs is not None:
-                    got_t = np.array([got_node[:, c].sum()
-                                      for c in trace.tier_cols])
-                    t_fracs[r] = _tier_frac(got_t, t_total[r].sum(axis=0))
-            else:
-                total_t = cum[r, -1]
-                if total_t <= budget_us:
-                    times[r] = total_t
-                    fracs[r] = deliv[r].sum() / tot_sum[r]
-                    got_t = None if t_fracs is None else t_deliv[r].sum(0)
-                else:
-                    times[r] = budget_us
-                    done = cum[r] <= budget_us
-                    bidx = int(np.argmax(~done))
-                    prev = float(cum[r, bidx - 1]) if bidx > 0 else 0.0
-                    part = (budget_us - prev) / max(nat[r, bidx], 1e-9)
-                    got = deliv[r][done].sum() + deliv[r, bidx] * part
-                    fracs[r] = got / tot_sum[r]
-                    got_t = (None if t_fracs is None
-                             else (t_deliv[r] * done[:, None]).sum(0)
-                             + t_deliv[r, bidx] * part)
-                if got_t is not None:
-                    t_fracs[r] = _tier_frac(got_t, t_total[r].sum(axis=0))
+                times[r], got, gots = _step_window_round(r, budget_us)
+                fracs[r] = got / tot_sum[r]
+            elif window == "phase" and multi_phase:
+                t_sum, got = 0.0, 0.0
+                gots = [np.zeros(gd.shape[2]) for gd, _ in groups]
+                for k, rows in enumerate(ph_rows):
+                    t_k, got_k, gots_k = _cut_block(
+                        nat[r, rows], deliv[r, rows],
+                        budget_us * ph_frac[k],
+                        [gd[r, rows] for gd, _ in groups])
+                    t_sum += t_k
+                    got += got_k
+                    for gg, gk in zip(gots, gots_k):
+                        gg += gk
+                times[r] = t_sum
+                fracs[r] = got / tot_sum[r]
+            else:   # "round" (and "phase" on a single-phase plan)
+                times[r], got, gots = _cut_block(
+                    nat[r], deliv[r], budget_us,
+                    [gd[r] for gd, _ in groups])
+                fracs[r] = got / tot_sum[r]
+            for i, gg in enumerate(gots):
+                g_fracs[i][r] = _tier_frac(gg, g_tot[i][r])
             if adaptive:
                 node_frac = np.clip(
                     fracs[r] + rng.normal(0, 0.002, n), 0.0, 1.0)
@@ -678,14 +841,13 @@ class BatchedEngine:
                     smoothed, times[r] / 1e6, node_frac, cfg)
                 timeout = timeout_mod.adopt_scalar(
                     timeout_mod.coordinate(local), cfg)
-        return RoundStats(times_us=times, recv_frac=fracs, design="celeris",
-                          tier_recv_frac=t_fracs, **tier_kw)
+        return _pack(times, fracs, g_fracs, design="celeris")
 
     @staticmethod
-    def _assemble_round_window_fixed(trace, nat, deliv, tot_sum, budget_us,
-                                     t_deliv=None, t_total=None,
-                                     tier_kw=None):
-        """Fixed bounded round window, all rounds at once (paper protocol)."""
+    def _assemble_round_window_fixed(nat, deliv, tot_sum, budget_us,
+                                     groups=()):
+        """Fixed bounded round window, all rounds at once (paper
+        protocol).  Returns ``(times, fracs, group_fracs)``."""
         cum = np.cumsum(nat, axis=1)
         total_t = cum[:, -1]
         over = total_t > budget_us
@@ -702,29 +864,76 @@ class BatchedEngine:
         got = ((deliv * done).sum(axis=1)
                + np.take_along_axis(deliv, bidx[:, None], axis=1)[:, 0] * part)
         fracs = np.where(over, got / tot_sum, deliv.sum(axis=1) / tot_sum)
-        t_fracs = None
-        if t_deliv is not None:
-            # same window cut, applied per tier (the truncated step's
-            # partial credit splits in proportion to each tier's share
-            # of that step's delivered packets — identical math to the
-            # scalar path)
-            R = t_deliv.shape[0]
-            got_t = ((t_deliv * done[:, :, None]).sum(axis=1)
-                     + t_deliv[np.arange(R), bidx] * part[:, None])
-            full_t = t_deliv.sum(axis=1)
-            t_fracs = _tier_frac(np.where(over[:, None], got_t, full_t),
-                                 t_total.sum(axis=1))
-        return RoundStats(times_us=times, recv_frac=fracs, design="celeris",
-                          tier_recv_frac=t_fracs, **(tier_kw or {}))
+        g_fracs = []
+        for g_deliv, g_total in groups:
+            # same window cut, applied per group column (the truncated
+            # step's partial credit splits in proportion to each
+            # column's share of that step's delivered packets —
+            # identical math to the scalar path)
+            R = g_deliv.shape[0]
+            got_g = ((g_deliv * done[:, :, None]).sum(axis=1)
+                     + g_deliv[np.arange(R), bidx] * part[:, None])
+            full_g = g_deliv.sum(axis=1)
+            g_fracs.append(_tier_frac(
+                np.where(over[:, None], got_g, full_g),
+                g_total.sum(axis=1)))
+        return times, fracs, g_fracs
+
+    @staticmethod
+    def _assemble_phase_window_fixed(nat, deliv, tot_sum, budget_us,
+                                     groups, ph_rows, ph_frac):
+        """Fixed per-phase windows, all rounds at once: every phase
+        block takes its ``budget_frac`` share of the round budget and
+        is truncated at its own deadline (the Celeris adaptive-timeout
+        idea applied per fabric tier — DCI blocks may run long without
+        eating the intra-pod phases' slack, and an intra-pod straggler
+        cannot push the DCI deadline out).  Single-phase plans reduce
+        to the round window exactly (``ph_frac == [1.0]``)."""
+        R = nat.shape[0]
+        times = np.zeros(R)
+        got = np.zeros(R)
+        got_g = [np.zeros((R, gd.shape[2])) for gd, _ in groups]
+        for k, rows in enumerate(ph_rows):
+            b_k = budget_us * ph_frac[k]
+            cum = np.cumsum(nat[:, rows], axis=1)
+            total_t = cum[:, -1]
+            over = total_t > b_k
+            times += np.where(over, b_k, total_t)
+            done = cum <= b_k
+            bidx = np.argmax(~done, axis=1)
+            prev = np.where(
+                bidx > 0,
+                np.take_along_axis(cum, np.maximum(bidx - 1, 0)[:, None],
+                                   axis=1)[:, 0],
+                0.0)
+            d_k = deliv[:, rows]
+            part = (b_k - prev) / np.maximum(
+                np.take_along_axis(nat[:, rows], bidx[:, None],
+                                   axis=1)[:, 0], 1e-9)
+            got_k = ((d_k * done).sum(axis=1)
+                     + np.take_along_axis(d_k, bidx[:, None],
+                                          axis=1)[:, 0] * part)
+            got += np.where(over, got_k, d_k.sum(axis=1))
+            for i, (gd, _) in enumerate(groups):
+                gd_k = gd[:, rows]
+                cut = ((gd_k * done[:, :, None]).sum(axis=1)
+                       + gd_k[np.arange(R), bidx] * part[:, None])
+                got_g[i] += np.where(over[:, None], cut,
+                                     gd_k.sum(axis=1))
+        fracs = got / tot_sum
+        g_fracs = [_tier_frac(gg, gt.sum(axis=1))
+                   for gg, (_, gt) in zip(got_g, groups)]
+        return times, fracs, g_fracs
 
     # ------------------------------------------------------------------
     def run(self, design: str, n_rounds: int = 400, *,
             celeris_timeout_us: float | None = None,
-            adaptive: bool = True, window: str = "round",
+            adaptive: bool = True, window: "str | WindowPolicy" = "round",
             seed: int | None = None, legacy_streams: bool = True
             ) -> RoundStats:
         """Simulate ``n_rounds`` AllReduce rounds for one NIC design."""
         seed = self.p.seed if seed is None else seed
+        window = WindowPolicy.parse(window).kind
         keep = (design,) if design == "celeris" and window == "step" else ()
         if design == "celeris" and adaptive:
             # the adaptive controller's per-round normal() draws make the
@@ -769,20 +978,31 @@ class BatchedSimParams:
 
     Celeris windows follow the paper protocol per (config, seed): fixed
     at that seed's RoCE median + 1 sigma unless ``celeris_timeout_us``
-    pins them explicitly.  ``n_pods`` adds the hierarchical-topology
+    pins them explicitly; ``timeout_scale`` multiplies the derived
+    window (same knob as ``coupling.schedule_from_engine`` — < 1
+    tightens the budget into the truncating tail regimes where window
+    *policies* actually differ).  ``n_pods`` adds the
+    hierarchical-topology
     dimension: pod counts > 1 run with the DCI overlay
     (:mod:`repro.core.transport.topology`) configured from
     ``base.topo``.  ``schedules`` adds the collective-schedule
-    dimension ("ring" | "hier", :mod:`repro.core.transport.schedule`).
+    dimension ("ring" | "hier" | "perrail",
+    :mod:`repro.core.transport.schedule`), and ``windows`` the Celeris
+    window-policy dimension ("round" | "phase",
+    :class:`~repro.core.transport.params.WindowPolicy`) — window
+    policies share one physics trace per cell, only the budget
+    assembly differs, so the window axis is nearly free.
     """
     n_nodes: Sequence[int] = (128,)
     message_mb: Sequence[float] = (25.0,)
     seeds: Sequence[int] = (0,)
     n_pods: Sequence[int] = (1,)
     schedules: Sequence[str] = ("ring",)
+    windows: Sequence[str] = ("round",)
     designs: Sequence[str] = designs.DESIGNS
     n_rounds: int = 200
     celeris_timeout_us: float | None = None
+    timeout_scale: float = 1.0
     legacy_streams: bool = False      # sweeps share one fabric trace
     base: SimParams = SimParams()
 
@@ -792,77 +1012,113 @@ class SweepResult:
     """``stats[(design, n_nodes, message_mb, seed)] -> RoundStats``.
 
     When the grid sweeps pods (``n_pods != (1,)``) keys grow a trailing
-    pod-count element, and when it sweeps schedules (``schedules !=
-    ("ring",)``) a trailing schedule name after that:
-    ``(design, n_nodes, message_mb, seed[, n_pods][, schedule])``.
+    pod-count element, when it sweeps schedules (``schedules !=
+    ("ring",)``) a trailing schedule name after that, and when it
+    sweeps window policies (``windows != ("round",)``) a trailing
+    window kind last:
+    ``(design, n_nodes, message_mb, seed[, n_pods][, schedule][,
+    window])``.
     """
     params: BatchedSimParams
     stats: Dict[tuple, RoundStats]
 
-    def _key(self, d, nn, mb, s, npods, sched="ring"):
+    def _key(self, d, nn, mb, s, npods, sched="ring", window="round"):
         key = (d, nn, mb, s)
         if tuple(self.params.n_pods) != (1,):
             key += (npods,)
         if tuple(self.params.schedules) != ("ring",):
             key += (sched,)
+        if tuple(self.params.windows) != ("round",):
+            key += (window,)
         return key
 
     def _defaults(self, *, message_mb=None, n_pods=None, schedule=None,
-                  n_nodes=None):
+                  n_nodes=None, window=None):
         p = self.params
         return (p.n_nodes[0] if n_nodes is None else n_nodes,
                 p.message_mb[0] if message_mb is None else message_mb,
                 p.n_pods[0] if n_pods is None else n_pods,
-                p.schedules[0] if schedule is None else schedule)
+                p.schedules[0] if schedule is None else schedule,
+                p.windows[0] if window is None else window)
 
     def p99_vs_scale(self, design: str, message_mb: float | None = None,
                      n_pods: int | None = None,
-                     schedule: str | None = None
+                     schedule: str | None = None,
+                     window: str | None = None
                      ) -> Dict[int, tuple[float, float]]:
         """{n_nodes: (mean p99 over seeds, std over seeds)}."""
-        _, mb, npods, sched = self._defaults(message_mb=message_mb,
-                                             n_pods=n_pods,
-                                             schedule=schedule)
+        _, mb, npods, sched, win = self._defaults(message_mb=message_mb,
+                                                  n_pods=n_pods,
+                                                  schedule=schedule,
+                                                  window=window)
         out = {}
         for nn in self.params.n_nodes:
-            v = [self.stats[self._key(design, nn, mb, s, npods, sched)].p99
+            v = [self.stats[self._key(design, nn, mb, s, npods, sched,
+                                      win)].p99
                  for s in self.params.seeds]
             out[nn] = (float(np.mean(v)), float(np.std(v)))
         return out
 
     def p99_vs_pods(self, design: str, n_nodes: int | None = None,
                     message_mb: float | None = None,
-                    schedule: str | None = None
+                    schedule: str | None = None,
+                    window: str | None = None
                     ) -> Dict[int, tuple[float, float]]:
         """{n_pods: (mean p99 over seeds, std over seeds)}."""
-        nn, mb, _, sched = self._defaults(message_mb=message_mb,
-                                          schedule=schedule,
-                                          n_nodes=n_nodes)
+        nn, mb, _, sched, win = self._defaults(message_mb=message_mb,
+                                               schedule=schedule,
+                                               n_nodes=n_nodes,
+                                               window=window)
         out = {}
         for npods in self.params.n_pods:
-            v = [self.stats[self._key(design, nn, mb, s, npods, sched)].p99
+            v = [self.stats[self._key(design, nn, mb, s, npods, sched,
+                                      win)].p99
                  for s in self.params.seeds]
             out[npods] = (float(np.mean(v)), float(np.std(v)))
         return out
 
     def p99_vs_schedule(self, design: str, n_nodes: int | None = None,
                         message_mb: float | None = None,
-                        n_pods: int | None = None
+                        n_pods: int | None = None,
+                        window: str | None = None
                         ) -> Dict[str, tuple[float, float]]:
         """{schedule: (mean p99 over seeds, std over seeds)} — the
         ring-vs-hierarchical comparison on one fabric configuration."""
-        nn, mb, npods, _ = self._defaults(message_mb=message_mb,
-                                          n_pods=n_pods, n_nodes=n_nodes)
+        nn, mb, npods, _, win = self._defaults(message_mb=message_mb,
+                                               n_pods=n_pods,
+                                               n_nodes=n_nodes,
+                                               window=window)
         out = {}
         for sched in self.params.schedules:
-            v = [self.stats[self._key(design, nn, mb, s, npods, sched)].p99
+            v = [self.stats[self._key(design, nn, mb, s, npods, sched,
+                                      win)].p99
                  for s in self.params.seeds]
             out[sched] = (float(np.mean(v)), float(np.std(v)))
         return out
 
+    def p99_vs_window(self, design: str, n_nodes: int | None = None,
+                      message_mb: float | None = None,
+                      n_pods: int | None = None,
+                      schedule: str | None = None
+                      ) -> Dict[str, tuple[float, float]]:
+        """{window: (mean p99 over seeds, std over seeds)} — the
+        round-vs-phase budget comparison on one fabric configuration
+        (same physics trace, different budget assembly)."""
+        nn, mb, npods, sched, _ = self._defaults(message_mb=message_mb,
+                                                 n_pods=n_pods,
+                                                 n_nodes=n_nodes,
+                                                 schedule=schedule)
+        out = {}
+        for win in self.params.windows:
+            v = [self.stats[self._key(design, nn, mb, s, npods, sched,
+                                      win)].p99
+                 for s in self.params.seeds]
+            out[win] = (float(np.mean(v)), float(np.std(v)))
+        return out
+
     def summary_rows(self):
-        """Flat (design, n_nodes, message_mb, seed[, n_pods][, schedule],
-        p50, p99, loss) rows."""
+        """Flat (design, n_nodes, message_mb, seed[, n_pods][, schedule]
+        [, window], p50, p99, loss) rows."""
         rows = []
         for key, st in sorted(self.stats.items()):
             rows.append(key + (st.p50, st.p99, st.mean_loss))
@@ -884,6 +1140,14 @@ def sweep(params: BatchedSimParams | None = None, *, progress=None
     if bp.legacy_streams and any(sc != "ring" for sc in bp.schedules):
         raise ValueError("legacy_streams=True is incompatible with "
                          "non-ring schedule sweep cells")
+    for win in bp.windows:
+        if WindowPolicy.parse(win).kind == "step":
+            # the per-step window needs per-flow (T, n) arrays the sweep
+            # deliberately never materializes (memory flat in cluster
+            # size); round/phase assemble from the reduced traces
+            raise ValueError("sweep windows must be 'round' or 'phase' "
+                             "(window='step' needs per-flow traces; use "
+                             "BatchedEngine.run)")
     res = SweepResult(params=bp, stats={})
     for nn in bp.n_nodes:
         for mb in bp.message_mb:
@@ -909,18 +1173,27 @@ def sweep(params: BatchedSimParams | None = None, *, progress=None
                         if "celeris" in bp.designs and to is None:
                             if "roce" in bp.designs:
                                 base = eng.assemble(tr["roce"], s)
-                                to = float(np.percentile(base.times_us, 50)
-                                           + base.times_us.std())
+                                to = float((np.percentile(base.times_us, 50)
+                                            + base.times_us.std())
+                                           * bp.timeout_scale)
                             else:
-                                to = 50_000.0
+                                to = 50_000.0 * bp.timeout_scale
                         for d in bp.designs:
-                            key = res._key(d, nn, mb, s, npods, sched)
-                            if d == "celeris":
-                                res.stats[key] = eng.assemble(
-                                    tr[d], s, celeris_timeout_us=to,
-                                    adaptive=False, window="round")
-                            else:
-                                res.stats[key] = eng.assemble(tr[d], s)
+                            # window policies share the physics trace:
+                            # only the celeris budget assembly differs
+                            for win in bp.windows:
+                                key = res._key(d, nn, mb, s, npods, sched,
+                                               win)
+                                if d == "celeris":
+                                    res.stats[key] = eng.assemble(
+                                        tr[d], s, celeris_timeout_us=to,
+                                        adaptive=False, window=win)
+                                elif win == bp.windows[0]:
+                                    st = eng.assemble(tr[d], s)
+                                    for w2 in bp.windows:
+                                        res.stats[res._key(
+                                            d, nn, mb, s, npods, sched,
+                                            w2)] = st
     return res
 
 

@@ -114,12 +114,46 @@ class ReliabilityParams:
 
 
 @dataclasses.dataclass(frozen=True)
+class WindowPolicy:
+    """How the Celeris bounded budget binds one AllReduce round.
+
+    - ``"round"`` — one deadline for the whole round (the paper's
+      adaptive-timeout policy; bit-exact with the pre-policy engine);
+    - ``"phase"`` — the same budget split across the collective
+      schedule's phase blocks by their ``budget_frac`` weights, each
+      block truncated at its own deadline.  Expensive (DCI) phases get
+      a proportionally larger share — "wait longer where the fabric is
+      slow, cut losses where it's cheap".  On a single-phase (ring)
+      plan the split is ``[1.0]`` and the policy degenerates to
+      ``"round"`` bit-for-bit.
+    - ``"step"`` — per-step deadlines: each phase's budget share is
+      divided uniformly over its steps (the beyond-paper fig2 policy).
+      On a single-phase plan this is the pre-policy per-step window
+      unchanged; multi-phase plans split per ``budget_frac`` first.
+    """
+    kind: str = "round"
+
+    KINDS = ("round", "phase", "step")
+
+    def __post_init__(self):
+        if self.kind not in self.KINDS:
+            raise ValueError(f"unknown window policy {self.kind!r}; "
+                             f"choose from {self.KINDS}")
+
+    @classmethod
+    def parse(cls, v: "WindowPolicy | str") -> "WindowPolicy":
+        return v if isinstance(v, cls) else cls(kind=str(v))
+
+
+@dataclasses.dataclass(frozen=True)
 class WorkloadParams:
     message_bytes: int = 25 * 1024 * 1024   # 25 MB per node per round
     # collective schedule riding the fabric (core/transport/schedule.py):
     # "ring" — flat 2(N-1)-step ring RS+AG, every step message/N bytes;
     # "hier" — reduce-scatter within pod -> pod-leader DCI exchange with
-    # 1/n_pods-sized shards -> all-gather within pod.
+    # 1/n_pods-sized shards -> all-gather within pod;
+    # "perrail" — hier with every node crossing pods (rank-aligned
+    # rails moving 1/(m*n_pods)-sized shards).
     schedule: str = "ring"
 
 

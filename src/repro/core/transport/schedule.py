@@ -36,11 +36,29 @@ of an ``M``-byte message takes ``N-1`` steps of ``M/N`` bytes per flow:
   DCI penalty applies to ``2(n_pods-1)`` large-shard steps instead of
   all of them, which is what moves the cross-pod tail (Fig. 5).  At
   ``n_pods=1`` the plan degenerates to the flat ring exactly.
+- :class:`PerRailHierarchicalSchedule` — the per-rail variant of the
+  hierarchical exchange: instead of funneling the DCI phase through one
+  leader per pod, *every* node crosses pods.  Node ``(pod i, rank j)``
+  rings over pods with its rank-``j`` peers (``rail j``), exchanging
+  ``M/(m * n_pods)``-byte shards over ``2(n_pods-1)`` steps — the same
+  DCI step count as the leader exchange, but the cross-pod payload is
+  spread over ``m`` concurrent rails, so each DCI flow serializes
+  ``m``-fold less per step.  Total bytes per round stay ``2(N-1) M``
+  (the conservation invariant all three schedules share).
+
+Per-phase window budgets: every phase carries a ``budget_frac`` weight
+(defaulting to its nominal serialization share, ``n_steps x
+payload_bytes``, with DCI phases additionally weighted by the mean
+oversubscription ratio — the "wait longer where the fabric is slow"
+policy).  :meth:`SchedulePlan.budget_fracs` normalizes the weights into
+the per-phase split of the Celeris round budget that the engine's
+``window="phase"`` assembly applies (see ``params.WindowPolicy``).
 
 Select a schedule with ``SimParams.work.schedule`` (``"ring"`` |
-``"hier"``), sweep it with ``BatchedSimParams.schedules``, and train
-against it with ``CollectiveMode.HIERARCHICAL`` — the trainer's sync
-order (exact intra-pod reduce → coded cross-pod exchange) mirrors
+``"hier"`` | ``"perrail"``), sweep it with
+``BatchedSimParams.schedules``, and train against it with
+``CollectiveMode.HIERARCHICAL`` — the trainer's sync order (exact
+intra-pod reduce → coded cross-pod exchange) mirrors
 :attr:`HierarchicalSchedule.PHASE_ORDER`, asserted in
 ``train_step.make_train_step``.
 """
@@ -62,15 +80,27 @@ class SchedulePhase:
     ``payload_bytes`` is per flow per step; a flow's sender column in
     the engine's ``(step, node)`` tensors is its ``src`` node (each
     node sends at most one flow per step in every schedule here).
+
+    ``budget_frac`` is the phase's *un-normalized* weight in the
+    per-phase window split (``window="phase"``): ``None`` defaults to
+    the nominal serialization share ``n_steps * payload_bytes``;
+    schedules set explicit weights where the fabric is slower than the
+    payload suggests (the DCI phases weight by oversubscription).
     """
     name: str
     src: np.ndarray            # (n_flows,) sender node per flow
     dst: np.ndarray            # (n_flows,) receiver node per flow
     n_steps: int               # steps of this phase per round
     payload_bytes: int         # bytes per flow per step
+    budget_frac: float | None = None   # window-budget weight (un-normalized)
 
     def n_pkts(self, net: NetworkParams) -> int:
         return max(1, self.payload_bytes // net.mtu_bytes)
+
+    @property
+    def budget_weight(self) -> float:
+        return (float(self.n_steps * self.payload_bytes)
+                if self.budget_frac is None else float(self.budget_frac))
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -127,6 +157,29 @@ class SchedulePlan:
             out += hg.tier_counts * (ph.n_pkts(net) * ph.n_steps)
         return out
 
+    def pod_pkts_round(self, net: NetworkParams, topo: TopologyParams,
+                       geometries: tuple | None = None) -> np.ndarray:
+        """(n_pods,) offered *intra-pod* packets per round per pod —
+        the weighting behind the per-pod axis-split drop schedules
+        (``coupling.AxisSchedules.per_pod``).  DCI flows belong to the
+        cross axis and are excluded."""
+        gs = geometries if geometries is not None else self.geometries(
+            net, topo)
+        out = np.zeros(topo.n_pods)
+        for ph, hg in zip(self.phases, gs):
+            for p, cols in enumerate(hg.pod_cols):
+                out[p] += cols.size * ph.n_pkts(net) * ph.n_steps
+        return out
+
+    def budget_fracs(self) -> np.ndarray:
+        """(n_phases,) normalized per-phase split of the Celeris round
+        budget (``window="phase"``).  Weights are each phase's
+        ``budget_weight``; a single-phase plan yields exactly
+        ``[1.0]``, so the phase window degenerates to the round window
+        bit-for-bit there."""
+        w = np.array([ph.budget_weight for ph in self.phases])
+        return w / w.sum()
+
     def bytes_per_round(self) -> int:
         """Total bytes offered to the fabric per round (all flows, all
         steps) — the payload-conservation invariant tests pin."""
@@ -168,6 +221,25 @@ class RingSchedule(CollectiveSchedule):
         return _mk_plan(self.name, (ring,))
 
 
+def _mean_oversub(topo: TopologyParams) -> float:
+    """Mean DCI oversubscription ratio (per-pod vectors average) — the
+    nominal slowdown a DCI phase's window-budget weight carries."""
+    return float(np.mean(topology.per_pod_array(
+        topo.dci_oversubscription, topo.n_pods, "dci_oversubscription")))
+
+
+def _nominal_us(net: NetworkParams, n_steps: int, payload_bytes: int,
+                extra_rtt_us: float = 0.0, slowdown: float = 1.0) -> float:
+    """Nominal unloaded phase time: per-step serialization (scaled by
+    the tier's bandwidth slowdown) plus the half-RTT latency floor,
+    summed over steps.  The hierarchical schedules use this as the
+    per-phase window-budget weight — a latency-aware proxy, so a DCI
+    phase whose cost is RTT- rather than payload-dominated (per-rail
+    small shards) still gets a budget share matching its real floor."""
+    return n_steps * (payload_bytes / net.link_bytes_per_us * slowdown
+                      + net.base_rtt_us / 2 + extra_rtt_us)
+
+
 class HierarchicalSchedule(CollectiveSchedule):
     """Reduce-scatter within pod → leader DCI exchange → all-gather
     within pod (see module docstring for the step/payload accounting)."""
@@ -178,6 +250,16 @@ class HierarchicalSchedule(CollectiveSchedule):
     # asserts against this so schedule and collective mode can't drift
     # apart silently.
     PHASE_ORDER = ("rs", "dci", "ag")
+
+    def _dci_phase(self, net, topo, work, m: int) -> SchedulePhase:
+        """The leader exchange: one flow per pod, ``M/n_pods`` shards."""
+        n_pods = topo.n_pods
+        leaders = np.arange(n_pods) * m
+        return SchedulePhase(
+            name="dci", src=leaders,
+            dst=((np.arange(n_pods) + 1) % n_pods) * m,
+            n_steps=2 * (n_pods - 1),
+            payload_bytes=work.message_bytes // n_pods)
 
     def plan(self, net, topo, work):
         topology.validate(net, topo)
@@ -191,22 +273,56 @@ class HierarchicalSchedule(CollectiveSchedule):
         src = np.arange(n)
         pod = src // m
         nxt = pod * m + (src - pod * m + 1) % m     # intra-pod ring
-        leaders = np.arange(n_pods) * m
+        dci = self._dci_phase(net, topo, work, m)
+        # per-phase budget weights: nominal unloaded phase time, with
+        # the DCI phase paying the oversubscription slowdown and the
+        # extra DCI propagation — per-phase windows wait longer where
+        # the fabric is slower (the Celeris tail policy, applied per
+        # tier instead of per round)
+        rs = SchedulePhase(name="rs", src=src, dst=nxt, n_steps=m - 1,
+                           payload_bytes=work.message_bytes // m)
+        intra_w = _nominal_us(net, rs.n_steps, rs.payload_bytes)
+        dci_w = _nominal_us(net, dci.n_steps, dci.payload_bytes,
+                            extra_rtt_us=topo.dci_rtt_us / 2,
+                            slowdown=_mean_oversub(topo))
         phases = (
-            SchedulePhase(name="rs", src=src, dst=nxt, n_steps=m - 1,
-                          payload_bytes=work.message_bytes // m),
-            SchedulePhase(name="dci", src=leaders,
-                          dst=((np.arange(n_pods) + 1) % n_pods) * m,
-                          n_steps=2 * (n_pods - 1),
-                          payload_bytes=work.message_bytes // n_pods),
-            SchedulePhase(name="ag", src=src, dst=nxt, n_steps=m - 1,
-                          payload_bytes=work.message_bytes // m),
+            dataclasses.replace(rs, budget_frac=intra_w),
+            dataclasses.replace(dci, budget_frac=dci_w),
+            dataclasses.replace(rs, name="ag", budget_frac=intra_w),
         )
         assert tuple(ph.name for ph in phases) == self.PHASE_ORDER
         return _mk_plan(self.name, phases)
 
 
-SCHEDULES = {cls.name: cls for cls in (RingSchedule, HierarchicalSchedule)}
+class PerRailHierarchicalSchedule(HierarchicalSchedule):
+    """Hierarchical exchange with *every* node crossing pods.
+
+    The DCI phase replaces the ``n_pods`` leader flows with all
+    ``N = m * n_pods`` nodes: node ``(pod i, rank j)`` rings over pods
+    along its rail ``j`` (dst = same rank, next pod), moving
+    ``M/(m * n_pods)``-byte shards for ``2(n_pods-1)`` steps.  Per-step
+    DCI serialization drops ``m``-fold versus the leader exchange
+    (same aggregate bytes spread over ``m`` concurrent rails), at the
+    cost of ``m``-fold more flows contending for each pod's uplink.
+    ``rs``/``ag`` phases, step count, and total bytes per round are
+    identical to :class:`HierarchicalSchedule`.
+    """
+
+    name = "perrail"
+
+    def _dci_phase(self, net, topo, work, m: int) -> SchedulePhase:
+        n_pods = topo.n_pods
+        src = np.arange(m * n_pods)
+        pod, rank = src // m, src % m
+        return SchedulePhase(
+            name="dci", src=src,
+            dst=((pod + 1) % n_pods) * m + rank,
+            n_steps=2 * (n_pods - 1),
+            payload_bytes=work.message_bytes // (m * n_pods))
+
+
+SCHEDULES = {cls.name: cls for cls in (RingSchedule, HierarchicalSchedule,
+                                       PerRailHierarchicalSchedule)}
 
 
 def get_schedule(name: str) -> CollectiveSchedule:

@@ -96,6 +96,17 @@ class HierGeometry:
     def tier_counts(self) -> np.ndarray:
         return np.array([c.size for c in self.tier_cols])
 
+    @property
+    def pod_cols(self) -> tuple:
+        """Per pod: the *intra-pod* flow columns whose source lives in
+        that pod (tor + spine tiers; DCI flows belong to the cross axis
+        and are excluded).  This is the grouping behind the per-pod
+        delivered fractions (``RoundStats.pod_recv_frac``) that drive
+        ``coupling.AxisSchedules.per_pod``."""
+        intra = self.tiers != 2
+        return tuple(np.flatnonzero(intra & (self.src_pod == p))
+                     for p in range(self.n_pods))
+
 
 def hier_geometry(net: NetworkParams, topo: TopologyParams,
                   src: np.ndarray | None = None,
@@ -250,13 +261,16 @@ def hier_params(n_pods: int, *, base: SimParams | None = None,
 
 
 def hier_protocol(params: SimParams, n_rounds: int = 200, seed: int = 0, *,
-                  timeout_scale: float = 1.0):
+                  timeout_scale: float = 1.0, window: str = "round"):
     """Fig.-4 protocol on the hierarchical fabric.
 
     Same window rule as the flat paper protocol — the RoCE baseline on
     the *same* fabric trace fixes the Celeris window at median + 1 sigma
     (scaled) — but run with the DCI overlay active, so the returned
-    :class:`RoundStats` carry per-tier delivered fractions.
+    :class:`RoundStats` carry per-tier delivered fractions.  ``window``
+    selects the Celeris budget policy ("round" | "phase", see
+    ``params.WindowPolicy``) — "phase" splits the same budget across
+    the collective schedule's phase blocks by their ``budget_frac``.
     Returns ``{design: RoundStats}`` for roce + celeris.
     """
     from repro.core.transport.engine import BatchedEngine
@@ -268,5 +282,5 @@ def hier_protocol(params: SimParams, n_rounds: int = 200, seed: int = 0, *,
     to = float((np.percentile(base.times_us, 50) + base.times_us.std())
                * timeout_scale)
     cel = eng.assemble(tr["celeris"], seed, celeris_timeout_us=to,
-                       adaptive=False, window="round")
+                       adaptive=False, window=window)
     return {"roce": base, "celeris": cel}

@@ -202,7 +202,16 @@ def scale_check_cell(arch: str, n_devices: int, mode: str = "lossy_hadamard",
     key = jax.ShapeDtypeStruct((2,), jnp.uint32,
                                sharding=jax.sharding.NamedSharding(
                                    mesh, jax.sharding.PartitionSpec()))
-    drop = jax.ShapeDtypeStruct((), jnp.float32,
+    # hierarchical mode takes the per-pod (n_pods + 1,) drop vector
+    # ([intra_pod..., cross], coupling.AxisSchedules.per_pod) so the
+    # scale check lowers the per-pod mask-rate combine too; other
+    # modes take the scalar
+    drop_shape = ()
+    if CollectiveMode.parse(mode).hierarchical:
+        n_pods = mesh.shape.get(shd.POD_AXIS, 1)
+        if n_pods > 1:
+            drop_shape = (n_pods + 1,)
+    drop = jax.ShapeDtypeStruct(drop_shape, jnp.float32,
                                 sharding=jax.sharding.NamedSharding(
                                     mesh, jax.sharding.PartitionSpec()))
     step_fn = ts.make_train_step(

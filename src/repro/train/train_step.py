@@ -24,9 +24,12 @@ The gradient collective dispatches on
   fabric is effectively lossless), then the pod-mean gradients take
   the best-effort + Hadamard path over the 'pod' axis only — arrival
   masks are per-(pod, wire-row) at the DCI tier's drop rate.  The
-  step's ``drop_rate`` input is the ``(2,)`` axis vector
-  ``[intra, cross]`` produced by ``coupling.AxisSchedules`` /
-  ``HierStragglerModel``; the sync consumes ``drop_rate[-1]``.
+  step's ``drop_rate`` input is the axis vector produced by
+  ``coupling.AxisSchedules`` / ``HierStragglerModel``: the ``(2,)``
+  aggregate ``[intra, cross]`` consumes ``drop_rate[-1]``; the per-pod
+  ``(n_pods + 1,)`` form ``[intra_pod0..., cross]`` charges each pod's
+  mask the combined rate ``1 - (1 - intra_pod)(1 - cross)`` (the shard
+  rides its pod fabric before the DCI exchange).
   This sync order mirrors the transport engine's
   ``schedule.HierarchicalSchedule`` phase plan — intra-pod
   reduce-scatter, then the lossy cross-pod DCI exchange, then
@@ -341,10 +344,21 @@ def make_train_step(cfg: ModelConfig, mesh, opt_cfg: adamw.OptConfig,
             # intra-pod exact, cross-pod coded-lossy: every data shard
             # in a pod shares the pod's wire, so the mask peer is the
             # pod index and the drop is the cross-pod (DCI) component
-            # of the [intra, cross] axis vector (scalar inputs work
-            # too: reshape(-1)[-1] is the scalar itself)
+            # of the axis vector (scalar inputs work too:
+            # reshape(-1)[-1] is the scalar itself).  A per-pod
+            # (n_pods + 1,) vector ([intra_pod..., cross], from
+            # coupling.AxisSchedules.per_pod) additionally charges each
+            # pod's DCI contribution its own pod fabric: the shard
+            # rides pod p's intra fabric before the DCI exchange, so
+            # its arrival probability is the product of surviving both
+            # — rate = 1 - (1 - intra_p)(1 - cross).
             pod_id = peer_id // _dp_size(data_axes, mesh)
-            cross = jnp.reshape(drop_rate, (-1,))[-1]
+            dr = jnp.reshape(drop_rate, (-1,))
+            cross = dr[-1]
+            n_pods_mesh = _dp_size(pod_axes, mesh)
+            if dr.shape[0] == n_pods_mesh + 1 and n_pods_mesh > 1:
+                intra_p = jnp.take(dr, pod_id)
+                cross = 1.0 - (1.0 - intra_p) * (1.0 - cross)
             grads, frac = _sync_grads_celeris(
                 grads, dp, plans, key, cross, celeris, mesh, pod_id,
                 lossy_axes=pod_axes, exact_axes=data_axes)

@@ -8,6 +8,7 @@ import textwrap
 import numpy as np
 import pytest
 
+from repro import sharding as shd
 from repro.core.transport import (BatchedEngine, NetworkParams, SimParams,
                                   coupling)
 
@@ -177,3 +178,56 @@ def test_scale_check_512_lowers_plain_collectives():
         print('OK')
     """, devices=512, timeout=560)
     assert "OK" in out
+
+
+@pytest.mark.skipif(
+    not shd.plain_lossy_island_supported(),
+    reason="per-(peer,row) plain-lossy island needs the jax >= 0.8 "
+           "partitioner (0.4.x CPU CHECK-crashes on the uncoded island); "
+           "exercised by the CI jax-0.8 matrix leg")
+def test_plain_lossy_island_roundtrip_8dev():
+    """jax >= 0.8 only: CollectiveMode.LOSSY runs as a shard_map island
+    (``_sync_grads_plain_island``) — per-(peer, wire-row) masks applied
+    *before* the plain psum.  Zero drop must match the exact baseline
+    (no coding in this path, so equality is tight), and at a real rate
+    the realized received fraction tracks 1 - drop."""
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        import repro.configs as C
+        from repro import sharding as shd
+        from repro.data.pipeline import DataConfig, make_source
+        from repro.optim.adamw import OptConfig
+        from repro.train import train_step as ts, sharding_rules as rules
+        assert shd.plain_lossy_island_supported()
+        mesh = shd.make_mesh((8,), ('data',))
+        shd.set_global_mesh(mesh)
+        cfg = C.get_smoke('qwen2-0.5b')
+        src = make_source(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                     global_batch=8, seed=1))
+        host = src.global_batch(0, 8)
+        sp = rules.batch_specs(mesh, host)
+        batch = {k: jax.device_put(
+                     v, jax.sharding.NamedSharding(mesh, sp[k]))
+                 for k, v in host.items()}
+
+        def step_with(mode, drop):
+            fn = ts.make_train_step(cfg, mesh, OptConfig(lr=1e-3),
+                                    ts.CelerisConfig(mode=mode,
+                                                     min_coded_size=1024))
+            st = ts.init_state(jax.random.PRNGKey(0), cfg)
+            st = jax.device_put(st, ts.state_shardings(st, mesh))
+            st, m = fn(st, batch, jax.random.PRNGKey(1),
+                       jnp.float32(drop))
+            return {k: float(v) for k, v in m.items()}
+
+        m_ex = step_with('exact', 0.0)
+        m_l0 = step_with('lossy', 0.0)
+        assert m_l0['recv_frac'] == 1.0, m_l0
+        assert abs(m_l0['loss'] - m_ex['loss']) < 1e-4, (m_ex, m_l0)
+        m_ld = step_with('lossy', 0.25)
+        assert abs(m_ld['recv_frac'] - 0.75) < 0.05, m_ld
+        assert np.isfinite(m_ld['loss'])
+        print('OK')
+    """)
+    # NOTE for the 0.4.x container: this test auto-skips; the CI 0.8
+    # leg runs it (see .github/workflows/ci.yml, tier1-jax08 job).

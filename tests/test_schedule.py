@@ -247,12 +247,24 @@ def test_split_schedule_uses_plan_exposure():
         atol=1e-12)
 
 
-def test_step_window_requires_single_phase_plan():
+def test_step_window_runs_on_multi_phase_plan():
+    """The old single-phase guard is subsumed by the per-phase budget
+    machinery (ISSUE 5): the step window now divides each phase's
+    ``budget_frac`` share over its steps, so it runs on the hier plan
+    — and still demands per-flow data."""
     hp = topology.hier_params(2, base=SMALL, schedule="hier")
     eng = BatchedEngine(hp)
-    with pytest.raises(ValueError, match="single-phase"):
-        eng.run("celeris", 10, window="step", adaptive=False,
-                legacy_streams=False)
+    st = eng.run("celeris", 10, window="step", adaptive=False,
+                 legacy_streams=False, celeris_timeout_us=50_000.0)
+    assert st.times_us.shape == (10,)
+    assert np.all(st.times_us <= 50_000.0 + 1e-6)
+    assert np.all((st.recv_frac >= 0) & (st.recv_frac <= 1))
+    assert st.tier_recv_frac.shape == (10, 3)
+    assert st.pod_recv_frac.shape == (10, 2)
+    # per-flow data is still required
+    tr = eng.traces(["celeris"], 5, 0, legacy_streams=False)
+    with pytest.raises(ValueError, match="per-flow"):
+        eng.assemble(tr["celeris"], 0, window="step", adaptive=False)
 
 
 # ------------------------------------------- per-pod oversubscription

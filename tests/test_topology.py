@@ -163,13 +163,22 @@ def test_split_schedule_matches_engine_tiers():
         sched.intra.rates, np.clip(want_intra, 0, coupling.MAX_DROP),
         atol=1e-12)
 
-    # the trainer adapter walks both axes in lockstep
+    # the trainer adapter walks every axis in lockstep; since ISSUE 5
+    # multi-pod engine runs refine intra into per-pod schedules, so the
+    # vector is (n_pods + 1,) with cross still the last element
     m = coupling.HierStragglerModel(sched)
     v0 = m.drop_rate(2.0, None)
-    assert v0.shape == (2,)
-    assert v0[0] == pytest.approx(sched.intra.rate(0))
-    assert v0[1] == pytest.approx(sched.cross.rate(0))
-    assert m.drop_rate(2.0, None)[1] == pytest.approx(sched.cross.rate(1))
+    assert v0.shape == (3,)
+    for p in range(2):
+        assert v0[p] == pytest.approx(sched.per_pod[p].rate(0))
+    assert v0[-1] == pytest.approx(sched.cross.rate(0))
+    assert m.drop_rate(2.0, None)[-1] == pytest.approx(sched.cross.rate(1))
+    # and the per-pod rates recombine to the aggregate intra rate
+    w = cel.pod_pkts
+    np.testing.assert_allclose(
+        (np.array([sched.per_pod[p].rates for p in range(2)]).T
+         * w).sum(axis=1) / w.sum(),
+        np.clip(want_intra, 0, coupling.MAX_DROP), atol=1e-9)
 
 
 def test_split_schedule_requires_tier_stats():
