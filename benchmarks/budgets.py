@@ -1,0 +1,27 @@
+"""Shared Celeris budget-tightening constants for the benchmark suite.
+
+The paper's adaptive-timeout rule sets the Celeris round budget at the
+RoCE baseline's median + 1 sigma *on the same fabric trace*.  At that
+setting the bounded window rarely binds — it is a tail insurance
+policy, not a truncating regime — so figure cells that study what the
+window *does* (fig6's policy A/B, fig7's matched-p99 fault cells)
+tighten the rule by a scale factor:
+
+- ``TAIL_SCALE`` (full tier): budget = paper rule x 0.25, deep in the
+  truncating regime where window policies and fault cuts actually move
+  data-loss numbers.  Chosen in PR 5 so the 512-1024-node hier cells
+  show the per-phase window's 2-4x loss win at matched p99.
+- ``SMOKE_TAIL_SCALE`` (CI smoke tier): x 0.4 — the 32-node smoke
+  fabric has milder contention, so the same 0.25 would cut into the
+  *median* and make smoke cells noise-dominated; 0.4 lands in the same
+  tail-truncating regime relative to the smaller fabric's spread.
+
+fig7 reuses both: its matched-p99 criterion pins each schedule's
+Celeris budget from the *clean* (fault-free) RoCE trace at these
+scales, then holds that budget fixed while the fault rate sweeps — so
+"Celeris sustains N x the fault rate" is measured at an unchanged
+deadline, not by quietly relaxing the window.
+"""
+
+TAIL_SCALE = 0.25
+SMOKE_TAIL_SCALE = 0.4

@@ -49,9 +49,14 @@ OVERSUBS = (2.0, 8.0)
 SCHEDULES = ("ring", "hier", "perrail")
 WINDOWS = ("round", "phase")
 N_PODS = 4
-# budget tightening into the truncating tail regime (paper rule x this)
-TAIL_SCALE = 0.25
-SMOKE_TAIL_SCALE = 0.4
+# budget tightening into the truncating tail regime (paper rule x this);
+# shared with fig7's matched-p99 fault cells — see budgets.py.  Kept as
+# module attributes too (gen_experiments and older callers read them
+# from here).
+try:
+    from benchmarks.budgets import SMOKE_TAIL_SCALE, TAIL_SCALE  # noqa: E402
+except ImportError:  # run as a script from inside benchmarks/
+    from budgets import SMOKE_TAIL_SCALE, TAIL_SCALE  # noqa: E402
 
 # 32-node smoke fabric: same burst-rate downscale the tier-1 transport
 # tests use; the DCI tier keeps its (much busier) defaults.

@@ -1,0 +1,356 @@
+"""Fig. 7 (paper headline): NIC fault injection and resilience.
+
+The abstract's third claim — "nearly doubles NIC resilience to faults"
+— measured with the seeded fault model (``FaultParams`` /
+``transport.faults``): NIC stalls, NIC crashes (with restart), link
+flaps, rail failures, and slow-NIC stragglers, injected into the same
+whole-trace engine that produces every other figure (zero-fault runs
+stay bit-exact with the committed seed stats).
+
+**Protocol (matched p99/goodput).**  Per collective schedule the
+Celeris budget is fixed from the *clean* trace by the paper rule (RoCE
+median + 1 sigma) tightened by the shared ``budgets.TAIL_SCALE``; the
+fault-rate sweep then runs with that budget pinned, so a design never
+"sustains" a fault rate by quietly relaxing its deadline.  A design
+*sustains* a fault rate when, relative to its own clean run on the same
+schedule:
+
+- round p99 <= ``P99_SLACK`` x clean p99 (the reliable designs' failure
+  mode: blocked flows retransmit into the stall and the tail blows up),
+  and
+- mean normalized goodput >= ``GOODPUT_FLOOR`` x its *clean* mean
+  goodput (Celeris's failure mode: the bounded window cuts the faulted
+  flows, so its p99 holds by construction and data loss is what
+  degrades).  Both sides are design-relative — a heavy clean tail is
+  the fabric's contention story (figs 2/4/6), not a fault effect, so
+  it must not leak into the resilience scan.
+
+The **resilience ratio** per (kind, schedule) is the highest sustained
+fault rate of Celeris over that of the RoCE baseline, scanned
+monotonically up the rate grid; the paper-regime claim is ratio >= ~2
+(``fig7_resilience_ratio_*`` keys, threshold 2.0).
+
+**Blast radius.**  A rail failure under the ``hier`` leader exchange
+(leaders are rank 0 = rail 0) kills the *entire* DCI phase; under
+``perrail`` it kills 1/m of the rails.  The ``fig7_rail_*`` keys pin
+the asymmetry (perrail's DCI loss strictly smaller at the same rail
+failure rate).
+
+**End-to-end.**  The faulted 2-pod engine feeds
+``coupling.split_schedule_from_engine(fault=...)`` and the smoke LM
+trains under ``CollectiveMode.HIERARCHICAL`` — the faulted pods' drop
+masks reach the gradients, and recovery vs the exact baseline stays
+>= 0.9 at the paper-regime fault cell (``fig7_recovery``).
+
+Smoke tier (CI): 32-node 2-pod hier, clean + two stall rates,
+``smoke_fig7``-prefixed keys gated by ``check_regression
+--require-all``.  Full tier adds a 512-node stall cell.
+"""
+import time
+
+import numpy as np
+
+import repro.configs as C
+from repro.core.transport import (BatchedSimParams, FaultParams,
+                                  NetworkParams, SimParams, coupling,
+                                  sweep, topology)
+
+try:
+    from benchmarks.budgets import SMOKE_TAIL_SCALE, TAIL_SCALE
+    from benchmarks import fig4_cross_pod_tail as f4
+except ImportError:  # run as a script from inside benchmarks/
+    from budgets import SMOKE_TAIL_SCALE, TAIL_SCALE
+    import fig4_cross_pod_tail as f4
+
+NODES = 128
+N_PODS = 4
+OVERSUB = 4.0
+SCHEDULES = ("ring", "hier", "perrail")
+SCALE_NODES = 512          # the big-fabric stall cell (full tier only)
+
+# sustainability criterion (see module docstring)
+P99_SLACK = 1.5
+GOODPUT_FLOOR = 0.8
+
+# fault-rate grids, low -> high.  Rates are per node-step (stall,
+# crash), per edge-step (flap) or per round (rail); the grids bracket
+# the regime where the RoCE baseline stops sustaining but Celeris still
+# does — the resilience ratio reads directly off the scan.
+RATE_GRID = {
+    "stall": (1e-5, 3e-5, 1e-4, 3e-4, 1e-3),
+    "crash": (3e-6, 1e-5, 3e-5, 1e-4, 3e-4),
+    "flap": (1e-4, 3e-4, 1e-3, 3e-3, 1e-2),
+}
+FAULT_KW = {"crash": {"crash_restart_steps": 64}}
+RAIL_RATES = (0.1, 0.3)
+PAPER_CELL = ("stall", 1e-4)    # the paper-regime fault cell
+RECOVERY_PODS = 2
+
+SMOKE_PARAMS = SimParams(net=NetworkParams(n_nodes=32,
+                                           burst_on_prob=0.0008))
+SMOKE_OVERSUB = 2.0     # milder DCI tier: fault signal, not contention
+SMOKE_RATES = (3e-4, 3e-3)
+
+
+def _rtag(rate):
+    """Key-safe rate tag: 3e-05 -> '3em05'."""
+    return f"{rate:g}".replace(".", "p").replace("-", "m").replace("+", "")
+
+
+def _goodput(st):
+    """Absolute mean goodput (delivered fraction per unit time).  The
+    fault overlay never perturbs the contention streams, so a faulted
+    run and its clean pass are perfectly paired round-for-round —
+    comparing absolute goodput between them isolates the fault effect
+    from the fabric's contention variance."""
+    return float(np.mean(st.recv_frac / np.maximum(st.times_us, 1e-9)))
+
+
+def _gupf(st, clean_st):
+    """Paired goodput-under-failure: the faulted rounds' mean goodput
+    over the *same rounds* of the paired clean run (same seed, same
+    contention trace).  Removes the cross-round skew that makes the
+    within-trace ``RoundStats.goodput_under_failure`` noisy when only a
+    handful of rounds fault."""
+    f = st.faulted
+    if not f.any():
+        return 1.0
+    g = st.recv_frac / np.maximum(st.times_us, 1e-9)
+    g0 = clean_st.recv_frac / np.maximum(clean_st.times_us, 1e-9)
+    return float(g[f].mean() / max(float(g0[f].mean()), 1e-30))
+
+
+def _sustained(st, clean):
+    return (st.p99 <= P99_SLACK * clean.p99
+            and _goodput(st) >= GOODPUT_FLOOR * _goodput(clean))
+
+
+def _max_sustained(cells, clean, rates):
+    """Monotone scan up the grid: highest rate with every rate at or
+    below it sustained.  0.0 if even the lowest rate fails."""
+    best = 0.0
+    for r in rates:
+        if not _sustained(cells[r], clean):
+            break
+        best = r
+    return best
+
+
+def _fault_sweep(base, nn, npods, sched, kinds_rates, budget, n_rounds,
+                 seed, progress=None):
+    """One pinned-budget sweep over a list of (kind, rate) cells."""
+    faults = tuple(FaultParams.of_kind(k, r, **FAULT_KW.get(k, {}))
+                   for k, r in kinds_rates)
+    res = sweep(BatchedSimParams(
+        n_nodes=(nn,), seeds=(seed,), n_pods=(npods,), schedules=(sched,),
+        designs=("roce", "celeris"), n_rounds=n_rounds,
+        celeris_timeout_us=budget, faults=faults, base=base),
+        progress=progress)
+    return {(k, r): {d: res.stats[res._key(d, nn, 25.0, seed, npods,
+                                           sched, "round", fp.tag)]
+                     for d in ("roce", "celeris")}
+            for (k, r), fp in zip(kinds_rates, faults)}
+
+
+def _clean_pass(base, nn, npods, sched, n_rounds, seed, tail_scale,
+                progress=None):
+    """Clean (fault-free) stats + the pinned Celeris budget."""
+    res = sweep(BatchedSimParams(
+        n_nodes=(nn,), seeds=(seed,), n_pods=(npods,), schedules=(sched,),
+        designs=("roce", "celeris"), n_rounds=n_rounds,
+        timeout_scale=tail_scale, base=base), progress=progress)
+    clean = {d: res.stats[res._key(d, nn, 25.0, seed, npods, sched)]
+             for d in ("roce", "celeris")}
+    roce = clean["roce"]
+    budget = float((np.percentile(roce.times_us, 50) + roce.times_us.std())
+                   * tail_scale)
+    return clean, budget
+
+
+def run(steps=40, seed=0, n_rounds=60, smoke=False, prefix="fig7",
+        scale_cell=True):
+    rows = []
+
+    if smoke:
+        print("\n== Fig. 7 smoke: 2-pod 32-node hier, stall faults at "
+              "pinned budget ==")
+        base = topology.hier_params(2, base=SMOKE_PARAMS,
+                                    dci_oversubscription=SMOKE_OVERSUB)
+        clean, budget = _clean_pass(base, 32, 2, "hier", 40, seed,
+                                    SMOKE_TAIL_SCALE)
+        cells = _fault_sweep(base, 32, 2, "hier",
+                             [("stall", r) for r in SMOKE_RATES],
+                             budget, 40, seed)
+        rows.append((f"{prefix}_p99_ms_roce_clean",
+                     round(clean["roce"].p99 / 1e3, 2), None))
+        rows.append((f"{prefix}_p99_ms_celeris_clean",
+                     round(clean["celeris"].p99 / 1e3, 2), None))
+        for r in SMOKE_RATES:
+            cel, roc = cells[("stall", r)]["celeris"], cells[("stall", r)]["roce"]
+            tag = _rtag(r)
+            gupf = _gupf(cel, clean["celeris"])
+            rows.append((f"{prefix}_p99_ms_roce_stall_{tag}",
+                         round(roc.p99 / 1e3, 2), None))
+            rows.append((f"{prefix}_gupf_celeris_stall_{tag}",
+                         round(gupf, 4), None))
+            rows.append((f"{prefix}_loss_celeris_stall_{tag}",
+                         round(cel.mean_loss, 4), None))
+            print(f"stall {r:g}: roce p99 {roc.p99/1e3:8.2f} ms "
+                  f"(clean {clean['roce'].p99/1e3:.2f})  "
+                  f"celeris p99 {cel.p99/1e3:.2f} ms  "
+                  f"loss {cel.mean_loss*100:5.2f}%  gupf {gupf:.3f}")
+        # the smoke resilience check: at the high smoke rate celeris
+        # still sustains while roce's tail has blown past the slack
+        hi = cells[("stall", SMOKE_RATES[-1])]
+        rows.append((f"{prefix}_celeris_sustains_hi",
+                     float(_sustained(hi["celeris"], clean["celeris"])),
+                     1.0))
+        rows.append((f"{prefix}_roce_p99_blowup_hi",
+                     round(hi["roce"].p99 / clean["roce"].p99, 2), None))
+        return rows
+
+    t0 = time.perf_counter()
+    base = topology.hier_params(N_PODS, dci_oversubscription=OVERSUB)
+    print(f"\n== Fig. 7: fault rate x kind x design x schedule "
+          f"({NODES} nodes, {N_PODS} pods, oversub {OVERSUB:.0f}, "
+          f"budget = paper rule x {TAIL_SCALE}) ==")
+
+    ratios = {}
+    for sched in SCHEDULES:
+        clean, budget = _clean_pass(
+            base, NODES, N_PODS, sched, n_rounds, seed, TAIL_SCALE,
+            progress=lambda m: print(f"  [fig7 clean] {m}", flush=True))
+        kinds_rates = [(k, r) for k in RATE_GRID for r in RATE_GRID[k]]
+        cells = _fault_sweep(
+            base, NODES, N_PODS, sched, kinds_rates, budget, n_rounds,
+            seed, progress=lambda m: print(f"  [fig7] {m}", flush=True))
+        print(f"\n-- schedule {sched} (clean roce p99 "
+              f"{clean['roce'].p99/1e3:.2f} ms, celeris "
+              f"{clean['celeris'].p99/1e3:.2f} ms, budget "
+              f"{budget/1e3:.2f} ms) --")
+        print(f"{'kind':>6s} {'rate':>8s} {'roce p99':>9s} {'roce gp':>8s} "
+              f"{'cel p99':>8s} {'cel gp':>7s} {'cel loss%':>10s} "
+              f"{'sustained':>16s}")
+        for k in RATE_GRID:
+            per_rate = {}
+            for r in RATE_GRID[k]:
+                cell = cells[(k, r)]
+                per_rate[r] = cell
+                roc, cel = cell["roce"], cell["celeris"]
+                sus = (("roce" if _sustained(roc, clean["roce"]) else "-")
+                       + "/" + ("cel" if _sustained(cel, clean["celeris"])
+                                else "-"))
+                print(f"{k:>6s} {r:8.0e} {roc.p99/1e3:9.2f} "
+                      f"{_goodput(roc)/_goodput(clean['roce']):8.3f} "
+                      f"{cel.p99/1e3:8.2f} "
+                      f"{_goodput(cel)/_goodput(clean['celeris']):7.3f} "
+                      f"{cel.mean_loss*100:10.2f} {sus:>16s}")
+                tag = f"{k}_{_rtag(r)}_{sched}"
+                rows.append((f"{prefix}_p99_ms_roce_{tag}",
+                             round(roc.p99 / 1e3, 2), None))
+                rows.append((f"{prefix}_gupf_celeris_{tag}",
+                             round(_gupf(cel, clean["celeris"]), 4),
+                             None))
+            roce_max = _max_sustained(
+                {r: per_rate[r]["roce"] for r in RATE_GRID[k]},
+                clean["roce"], RATE_GRID[k])
+            cel_max = _max_sustained(
+                {r: per_rate[r]["celeris"] for r in RATE_GRID[k]},
+                clean["celeris"], RATE_GRID[k])
+            # floor the denominator at half the lowest grid rate so a
+            # baseline that sustains nothing reads as "ratio vs below
+            # the grid", not infinity; cap the report symmetrically
+            ratio = min(cel_max / max(roce_max, RATE_GRID[k][0] / 2),
+                        100.0)
+            ratios[(k, sched)] = ratio
+            rows.append((f"{prefix}_max_rate_roce_{k}_{sched}",
+                         roce_max, None))
+            rows.append((f"{prefix}_max_rate_celeris_{k}_{sched}",
+                         cel_max, None))
+            rows.append((f"{prefix}_resilience_ratio_{k}_{sched}",
+                         round(ratio, 2), 2.0))
+            print(f"   -> {k}: max sustained rate roce {roce_max:g}, "
+                  f"celeris {cel_max:g}, resilience ratio {ratio:.1f}x")
+        # recovery time at the paper-regime cell
+        if PAPER_CELL in cells:
+            cel = cells[PAPER_CELL]["celeris"]
+            rows.append((f"{prefix}_recovery_rounds_celeris_"
+                         f"{PAPER_CELL[0]}_{sched}",
+                         round(cel.recovery_rounds(), 2), None))
+            rows.append((f"{prefix}_gupf_paper_cell_{sched}",
+                         round(_gupf(cel, clean["celeris"]), 4), None))
+
+    # rail-failure blast radius: hier leader exchange vs perrail
+    print("\n-- rail failure blast radius (hier vs perrail) --")
+    dci = {}
+    for sched in ("hier", "perrail"):
+        clean, budget = _clean_pass(base, NODES, N_PODS, sched,
+                                    n_rounds, seed, TAIL_SCALE)
+        cells = _fault_sweep(base, NODES, N_PODS, sched,
+                             [("rail", r) for r in RAIL_RATES],
+                             budget, n_rounds, seed)
+        for rate in RAIL_RATES:
+            cel = cells[("rail", rate)]["celeris"]
+            dci[(sched, rate)] = cel.tier_loss("dci")
+            gupf = _gupf(cel, clean["celeris"])
+            tag = f"rail_{_rtag(rate)}_{sched}"
+            rows.append((f"{prefix}_dci_loss_{tag}",
+                         round(dci[(sched, rate)], 4), None))
+            rows.append((f"{prefix}_gupf_celeris_{tag}",
+                         round(gupf, 4), None))
+            print(f"rail rate {rate:g} {sched:>8s}: dci loss "
+                  f"{dci[(sched, rate)]*100:6.2f}%  gupf {gupf:.3f}")
+    for rate in RAIL_RATES:
+        rows.append((f"{prefix}_rail_blast_ratio_{_rtag(rate)}",
+                     round(dci[('hier', rate)]
+                           / max(dci[('perrail', rate)], 1e-4), 2),
+                     None))
+
+    # the 512-node stall cell (scale check for the nightly job)
+    if scale_cell:
+        print(f"\n-- {SCALE_NODES}-node stall cell --")
+        clean, budget = _clean_pass(
+            base, SCALE_NODES, N_PODS, "hier", n_rounds, seed, TAIL_SCALE,
+            progress=lambda m: print(f"  [fig7 n{SCALE_NODES}] {m}",
+                                     flush=True))
+        cell = _fault_sweep(base, SCALE_NODES, N_PODS, "hier",
+                            [PAPER_CELL], budget, n_rounds,
+                            seed)[PAPER_CELL]
+        roc, cel = cell["roce"], cell["celeris"]
+        rows.append((f"{prefix}_p99_ms_roce_stall_n{SCALE_NODES}",
+                     round(roc.p99 / 1e3, 2), None))
+        rows.append((f"{prefix}_p99_ms_celeris_stall_n{SCALE_NODES}",
+                     round(cel.p99 / 1e3, 2), None))
+        gupf = _gupf(cel, clean["celeris"])
+        rows.append((f"{prefix}_gupf_celeris_stall_n{SCALE_NODES}",
+                     round(gupf, 4), None))
+        print(f"n={SCALE_NODES} stall {PAPER_CELL[1]:g}: roce p99 "
+              f"{roc.p99/1e3:.2f} ms (clean {clean['roce'].p99/1e3:.2f})  "
+              f"celeris p99 {cel.p99/1e3:.2f} ms  gupf {gupf:.3f}")
+
+    # end-to-end: faulted 2-pod schedule -> hierarchical training
+    print(f"\n== Fig. 7 recovery: faulted {RECOVERY_PODS}-pod axis-split "
+          f"schedule -> hierarchical step ==")
+    fp = FaultParams.of_kind(PAPER_CELL[0], PAPER_CELL[1],
+                             **FAULT_KW.get(PAPER_CELL[0], {}))
+    sched = coupling.split_schedule_from_engine(
+        steps, seed=seed, n_pods=RECOVERY_PODS, n_nodes=NODES,
+        timeout_scale=f4.RECOVERY_SCALE, fault=fp)
+    rows.append((f"{prefix}_drop_mean_intra", round(sched.intra.mean, 4),
+                 None))
+    rows.append((f"{prefix}_drop_mean_cross", round(sched.cross.mean, 4),
+                 None))
+    cfg = C.get_smoke("qwen2-0.5b")
+    rec = f4._recovery(cfg, steps, seed, sched, rows, prefix)
+    verdict = "PASS" if rec >= 0.9 else "FAIL"
+    print(f"faulted hierarchical recovery {rec*100:.1f}% (claim: >=90%) "
+          f"-> {verdict}")
+
+    worst = min(ratios.values())
+    print(f"\nfig7 headline: worst-case resilience ratio "
+          f"{worst:.1f}x (claim: ~2x)  [{time.perf_counter()-t0:.0f} s]")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -4,12 +4,17 @@
     PYTHONPATH=src python examples/transport_study.py --sweep-timeout
     PYTHONPATH=src python examples/transport_study.py --scale-sweep
     PYTHONPATH=src python examples/transport_study.py --multi-pod
+    PYTHONPATH=src python examples/transport_study.py --faults stall:1e-4
+    PYTHONPATH=src python examples/transport_study.py --multi-pod \
+        --schedule perrail --faults rail:0.3
 """
 import argparse
+import dataclasses
 
 import numpy as np
 
-from repro.core.transport import (BatchedSimParams, CollectiveSimulator,
+from repro.core.transport import (BatchedEngine, BatchedSimParams,
+                                  CollectiveSimulator, DESIGNS, FaultParams,
                                   SimParams, TIERS, coupling, hier_params,
                                   hier_protocol, sweep)
 
@@ -39,12 +44,47 @@ def main():
                          "the schedule's phase blocks by budget_frac "
                          "(params.WindowPolicy)")
     ap.add_argument("--nodes", type=int, default=128)
+    ap.add_argument("--faults", type=str, default=None, metavar="KIND:RATE",
+                    help="seeded fault injection, e.g. stall:1e-4, "
+                         "crash:3e-5, flap:1e-3, rail:0.3, "
+                         "straggler:0.25; '+'-join for compound "
+                         "scenarios (params.FaultParams)")
     args = ap.parse_args()
+    fault = FaultParams.parse(args.faults) if args.faults else None
 
     sim = CollectiveSimulator(SimParams())
 
+    if args.faults and not args.multi_pod:
+        # faults are engine-native (shared-stream mode): run the paper
+        # protocol through BatchedEngine with the fault overlay active
+        p = dataclasses.replace(
+            SimParams(net=dataclasses.replace(SimParams().net,
+                                              n_nodes=args.nodes)),
+            fault=fault)
+        eng = BatchedEngine(p)
+        tr = eng.traces(list(DESIGNS), args.rounds, args.seed,
+                        legacy_streams=False)
+        base = eng.assemble(tr["roce"], args.seed)
+        to = float(np.percentile(base.times_us, 50) + base.times_us.std())
+        print(f"faults={fault.tag} nodes={args.nodes} "
+              f"rounds={args.rounds}")
+        print(f"{'design':10s} {'p50 ms':>8s} {'p99 ms':>8s} "
+              f"{'loss %':>7s} {'faulted':>8s} {'gupf':>6s} "
+              f"{'rec rounds':>11s}")
+        for d in DESIGNS:
+            s = (eng.assemble(tr[d], args.seed, celeris_timeout_us=to,
+                              adaptive=False)
+                 if d == "celeris" else eng.assemble(tr[d], args.seed))
+            print(f"{d:10s} {s.p50/1e3:8.2f} {s.p99/1e3:8.2f} "
+                  f"{s.mean_loss*100:7.2f} "
+                  f"{int(s.faulted.sum()):4d}/{s.faulted.size:<3d} "
+                  f"{s.goodput_under_failure:6.3f} "
+                  f"{s.recovery_rounds():11.2f}")
+        return
+
     if args.multi_pod:
-        print(f"schedule={args.schedule} window={args.window}")
+        print(f"schedule={args.schedule} window={args.window}"
+              + (f" faults={fault.tag}" if fault else ""))
         print(f"{'pods':>5s} {'oversub':>8s} {'p99 ms':>8s} "
               + "".join(f"{'loss% ' + t:>12s}" for t in TIERS)
               + f" {'sched intra/cross %':>20s}")
@@ -52,7 +92,7 @@ def main():
             for ov in (2.0, 8.0):
                 p = hier_params(npods, n_nodes=args.nodes,
                                 dci_oversubscription=ov,
-                                schedule=args.schedule)
+                                schedule=args.schedule, fault=fault)
                 cel = hier_protocol(p, n_rounds=args.rounds,
                                     seed=args.seed,
                                     window=args.window)["celeris"]

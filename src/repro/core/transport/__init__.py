@@ -1,6 +1,7 @@
 from repro.core.transport.params import (
     SimParams, NetworkParams, DcqcnParams, ReliabilityParams, WorkloadParams,
-    TopologyParams, WindowPolicy)
+    TopologyParams, WindowPolicy, FaultParams)
+from repro.core.transport.faults import FaultModel
 from repro.core.transport.engine import (
     BatchedEngine, BatchedSimParams, RoundStats, SweepResult, sweep)
 from repro.core.transport.simulator import CollectiveSimulator
@@ -19,8 +20,8 @@ from repro.core.transport.coupling import (
 
 __all__ = [
     "SimParams", "NetworkParams", "DcqcnParams", "ReliabilityParams",
-    "WorkloadParams", "TopologyParams", "WindowPolicy",
-    "CollectiveSimulator", "RoundStats",
+    "WorkloadParams", "TopologyParams", "WindowPolicy", "FaultParams",
+    "FaultModel", "CollectiveSimulator", "RoundStats",
     "DESIGNS", "TIERS", "BatchedEngine", "BatchedSimParams", "SweepResult",
     "sweep", "hier_params", "hier_protocol",
     "SCHEDULES", "CollectiveSchedule", "HierarchicalSchedule",

@@ -301,7 +301,8 @@ def split_schedule_from_engine(n_rounds: int, seed: int = 0, *,
                                = None,
                                schedule: str | None = None,
                                window: str = "round",
-                               timeout_scale: float = 1.0) -> AxisSchedules:
+                               timeout_scale: float = 1.0,
+                               fault=None) -> AxisSchedules:
     """Run the hierarchical engine and derive the axis-split schedule.
 
     Same window rule as :func:`schedule_from_engine` (RoCE baseline on
@@ -314,16 +315,20 @@ def split_schedule_from_engine(n_rounds: int, seed: int = 0, *,
     ``window`` selects the Celeris budget policy ("round" | "phase") —
     with "phase" the per-pod/per-tier loss reflects each phase block's
     own deadline.  The result always carries ``per_pod`` schedules
-    (multi-pod engine runs track per-pod fractions).
+    (multi-pod engine runs track per-pod fractions).  ``fault`` takes an
+    optional :class:`~repro.core.transport.params.FaultParams` (or its
+    ``kind:rate`` string form): the faulted run's per-pod loss then
+    charges the faulted pods' drop masks in hierarchical train steps —
+    the end-to-end path of the fig7 resilience experiment.
     """
     p = topology.hier_params(n_pods, base=params, n_nodes=n_nodes,
                              dci_oversubscription=dci_oversubscription,
-                             schedule=schedule)
+                             schedule=schedule, fault=fault)
     stats = topology.hier_protocol(p, n_rounds, seed, window=window,
                                    timeout_scale=timeout_scale)["celeris"]
     tag = (f"engine:celeris n={p.net.n_nodes} pods={n_pods} "
            f"sched={p.work.schedule} window={window} seed={seed} "
-           f"scale={timeout_scale}")
+           f"scale={timeout_scale} fault={p.fault.tag}")
     return split_schedule_from_round_stats(stats, source=tag)
 
 

@@ -71,7 +71,7 @@ from typing import Dict, Sequence
 import numpy as np
 
 from repro.core import timeout as timeout_mod
-from repro.core.transport import dcqcn, designs, network, replay, topology
+from repro.core.transport import dcqcn, designs, faults, network, replay, topology
 from repro.core.transport import schedule as schedule_mod
 from repro.core.transport.params import SimParams, WindowPolicy
 
@@ -144,6 +144,11 @@ class RoundStats:
     # per-pod axis-split coupling's inputs (None on flat topologies)
     pod_recv_frac: np.ndarray | None = None
     pod_pkts: np.ndarray | None = None
+    # fault-injection accounting (None when the trace ran fault-free):
+    # per round, the number of steps with >= 1 faulted flow and the
+    # total faulted (flow, step) cells (params.FaultParams, faults.py)
+    fault_steps: np.ndarray | None = None       # (rounds,)
+    affected_flows: np.ndarray | None = None    # (rounds,)
 
     @property
     def p50(self) -> float:
@@ -170,6 +175,57 @@ class RoundStats:
         if self.tier_counts is not None and self.tier_counts[k] == 0:
             return 0.0
         return float(1.0 - self.tier_recv_frac[:, k].mean())
+
+    # -- fault-resilience metrics (fig7) -------------------------------
+    @property
+    def faulted(self) -> np.ndarray:
+        """(rounds,) bool — rounds with at least one faulted flow."""
+        if self.fault_steps is None:
+            return np.zeros(self.times_us.shape[0], dtype=bool)
+        return np.asarray(self.fault_steps) > 0
+
+    def goodput_trace(self) -> np.ndarray:
+        """(rounds,) delivered payload per unit time, normalized so the
+        mean *fault-free* round is 1.0 (per-round offered payload is
+        constant, so goodput ∝ recv_frac / time).  Falls back to the
+        all-round mean when every round was faulted."""
+        g = self.recv_frac / np.maximum(self.times_us, 1e-9)
+        clean = ~self.faulted
+        ref = g[clean].mean() if clean.any() else g.mean()
+        return g / max(float(ref), 1e-30)
+
+    @property
+    def goodput_under_failure(self) -> float:
+        """Goodput retained in the faulted rounds, as the ratio of the
+        faulted rounds' mean goodput to the clean rounds' — the
+        "goodput under failure" axis of the fig7 grid (1.0 when the
+        trace was fault-free).  A ratio of means, so a single lucky
+        (idle-fabric) faulted round cannot dominate the statistic the
+        way a mean of per-round ratios would let it."""
+        f = self.faulted
+        if not f.any():
+            return 1.0
+        g = self.recv_frac / np.maximum(self.times_us, 1e-9)
+        ref = g[~f].mean() if (~f).any() else g.mean()
+        return float(g[f].mean() / max(float(ref), 1e-30))
+
+    def recovery_rounds(self, frac: float = 0.9) -> float:
+        """Mean rounds from the end of each fault episode until
+        normalized goodput first returns to ``frac`` — the
+        recovery-time-to-90%-goodput metric.  0.0 when recovery is
+        immediate (or nothing ever faulted); a still-faulted trace tail
+        is censored (no completed episode to measure), and an episode
+        unrecovered by end of trace counts its remaining length."""
+        f = self.faulted
+        if not f.any():
+            return 0.0
+        g = self.goodput_trace()
+        ends = np.flatnonzero(f[:-1] & ~f[1:]) + 1   # first clean round
+        waits = []
+        for e in ends:
+            ok = np.flatnonzero(g[e:] >= frac)
+            waits.append(float(ok[0]) if ok.size else float(f.size - e))
+        return float(np.mean(waits)) if waits else 0.0
 
     def summary(self) -> Dict[str, float]:
         return dict(p50_us=self.p50, p99_us=self.p99, p999_us=self.p999,
@@ -216,6 +272,10 @@ class StepTrace:
     pod_deliv: np.ndarray | None = None
     pod_total: np.ndarray | None = None
     pod_pkts_round: np.ndarray | None = None
+    # (T,) faulted-flow count per step (design-independent availability
+    # masks, shared by every design of the physics pass); None on
+    # fault-free traces (params.FaultParams inactive)
+    fault_flows: np.ndarray | None = None
 
 
 class BatchedEngine:
@@ -361,6 +421,12 @@ class BatchedEngine:
             # is no stream to replay for any other plan
             raise ValueError(
                 f"schedule={self.p.work.schedule!r} requires "
+                "legacy_streams=False (shared-fabric mode)")
+        if self.p.fault.active and legacy_streams:
+            # faults are engine-native processes with their own
+            # substreams; the replayed sequential streams predate them
+            raise ValueError(
+                "fault injection (FaultParams) requires "
                 "legacy_streams=False (shared-fabric mode)")
         if legacy_streams:
             return self._traces_legacy(design_list, n_rounds, seed,
@@ -569,6 +635,14 @@ class BatchedEngine:
         ph_steps = [np.flatnonzero(plan.phase_of_step == k)
                     for k in range(len(plan.phases))]
 
+        # seeded fault processes (params.FaultParams): generators are
+        # created once and consumed per block, like the fabric stream;
+        # inactive configs construct nothing and draw nothing, keeping
+        # fault-free traces bit-identical to the pre-fault engine
+        fmodel = (faults.FaultModel(p, seed, n, n_tors, steps)
+                  if p.fault.active else None)
+        fault_flows = np.zeros(T) if fmodel is not None else None
+
         ph_pod_cols = ([hg.pod_cols for hg in hgs] if hier else None)
         out = self._new_traces(
             design_list, T, steps, n, per_node_for,
@@ -626,8 +700,12 @@ class BatchedEngine:
             rate, cc_state = dcqcn.rate_trace(cnp, p.dcqcn, cc_state,
                                               dtype=np.float32)
 
+            # fault masks for this block: availability is physics, not
+            # design behavior, so one set of masks serves every design
+            blk = fmodel.advance(t0, tb) if fmodel is not None else None
+
             # phase pass 2: queueing + effective send rate (+ DCI
-            # overlay) per phase block
+            # overlay, + fault availability masks) per phase block
             for k, ph in enumerate(plan.phases):
                 rows, occ32, drop_p, occ_eff = ph_data[k]
                 qd = network.queue_delay_us(net, occ32)
@@ -637,11 +715,23 @@ class BatchedEngine:
                 if hier:
                     topology.overlay_rates(net, p.topo, hgs[k], occ_eff,
                                            rate_ph, occ32, qd, eff_rate)
-                ph_data[k] = (rows, occ32, drop_p, qd, eff_rate)
+                blocked = dead = None
+                if fmodel is not None:
+                    if fmodel.rate_scale is not None:
+                        # slow-NIC stragglers: scaled DCQCN-granted rate
+                        eff_rate *= fmodel.rate_scale[ph.src]
+                    blocked, dead = fmodel.phase_masks(
+                        blk, rows, ph, hgs[k], net.nodes_per_tor)
+                    nf = ((blocked.sum(axis=1) if blocked is not None else 0)
+                          + (dead.sum(axis=1) if dead is not None else 0))
+                    fault_flows[t0 + rows] = nf
+                ph_data[k] = (rows, occ32, drop_p, qd, eff_rate,
+                              blocked, dead)
 
             for d in design_list:
                 for k, ph in enumerate(plan.phases):
-                    rows, occ32, drop_p, qd, eff_rate = ph_data[k]
+                    (rows, occ32, drop_p, qd, eff_rate,
+                     blocked, dead) = ph_data[k]
                     pfc = (network.pfc_pause_trace(net, occ32, pfc_gen)
                            if d == "roce"
                            else np.zeros(occ32.shape, np.float32))
@@ -650,9 +740,13 @@ class BatchedEngine:
                                            transfer_gens[d])
                     if hier:
                         topology.add_dci_latency(p.topo, hgs[k], res.time_us)
+                    faults.apply_to_result(d, res, blocked, dead, rel)
                     self._phase_reduce_into(
                         out[d], t0 + rows, ph.src, hgs[k].tier_cols, res,
                         pod_cols=ph_pod_cols[k] if hier else None)
+        if fault_flows is not None:
+            for tr in out.values():
+                tr.fault_flows = fault_flows
         return out
 
     # ------------------------------------------------------------------
@@ -697,6 +791,13 @@ class BatchedEngine:
         tier_kw = dict(tier_counts=trace.tier_counts,
                        tier_pkts=trace.tier_pkts_round,
                        pod_pkts=trace.pod_pkts_round)
+        if trace.fault_flows is not None:
+            # fault exposure per round: steps with >= 1 faulted flow,
+            # and total faulted (flow, step) cells — design-independent,
+            # so every design's stats carry the same availability story
+            ff = trace.fault_flows.reshape(R, steps)
+            tier_kw.update(fault_steps=(ff > 0).sum(axis=1),
+                           affected_flows=ff.sum(axis=1))
 
         def _pack(times, fracs, group_fracs, design=trace.design):
             gf = list(group_fracs)
@@ -944,6 +1045,10 @@ class BatchedEngine:
             # non-ring schedules exist only in shared-fabric mode (no
             # sequential stream to replay)
             legacy_streams = False
+        if self.p.fault.active:
+            # fault processes are engine-native (their substreams have
+            # no sequential-simulator counterpart to replay)
+            legacy_streams = False
         tr = self.traces([design], n_rounds, seed,
                          legacy_streams=legacy_streams, per_node_for=keep)
         return self.assemble(tr[design], seed,
@@ -991,7 +1096,11 @@ class BatchedSimParams:
     window-policy dimension ("round" | "phase",
     :class:`~repro.core.transport.params.WindowPolicy`) — window
     policies share one physics trace per cell, only the budget
-    assembly differs, so the window axis is nearly free.
+    assembly differs, so the window axis is nearly free.  ``faults``
+    adds the failure-scenario dimension (``params.FaultParams``
+    instances, ``"kind:rate"`` specs, or ``None`` for the fault-free
+    baseline cell) — a fault changes the physics, so each fault cell
+    runs its own trace.
     """
     n_nodes: Sequence[int] = (128,)
     message_mb: Sequence[float] = (25.0,)
@@ -999,12 +1108,19 @@ class BatchedSimParams:
     n_pods: Sequence[int] = (1,)
     schedules: Sequence[str] = ("ring",)
     windows: Sequence[str] = ("round",)
+    faults: Sequence = (None,)
     designs: Sequence[str] = designs.DESIGNS
     n_rounds: int = 200
     celeris_timeout_us: float | None = None
     timeout_scale: float = 1.0
     legacy_streams: bool = False      # sweeps share one fabric trace
     base: SimParams = SimParams()
+
+    def fault_params(self) -> tuple:
+        """``faults`` normalized to FaultParams (None => inactive)."""
+        from repro.core.transport.params import FaultParams
+        return tuple(FaultParams() if f is None else FaultParams.parse(f)
+                     for f in self.faults)
 
 
 @dataclasses.dataclass
@@ -1015,14 +1131,19 @@ class SweepResult:
     pod-count element, when it sweeps schedules (``schedules !=
     ("ring",)``) a trailing schedule name after that, and when it
     sweeps window policies (``windows != ("round",)``) a trailing
-    window kind last:
+    window kind last, and when it sweeps fault scenarios (``faults !=
+    (None,)``) a trailing ``FaultParams.tag`` string after everything:
     ``(design, n_nodes, message_mb, seed[, n_pods][, schedule][,
-    window])``.
+    window][, fault])``.
     """
     params: BatchedSimParams
     stats: Dict[tuple, RoundStats]
 
-    def _key(self, d, nn, mb, s, npods, sched="ring", window="round"):
+    def fault_tags(self) -> tuple:
+        return tuple(fp.tag for fp in self.params.fault_params())
+
+    def _key(self, d, nn, mb, s, npods, sched="ring", window="round",
+             fault="none"):
         key = (d, nn, mb, s)
         if tuple(self.params.n_pods) != (1,):
             key += (npods,)
@@ -1030,6 +1151,8 @@ class SweepResult:
             key += (sched,)
         if tuple(self.params.windows) != ("round",):
             key += (window,)
+        if self.fault_tags() != ("none",):
+            key += (fault,)
         return key
 
     def _defaults(self, *, message_mb=None, n_pods=None, schedule=None,
@@ -1118,7 +1241,7 @@ class SweepResult:
 
     def summary_rows(self):
         """Flat (design, n_nodes, message_mb, seed[, n_pods][, schedule]
-        [, window], p50, p99, loss) rows."""
+        [, window][, fault], p50, p99, loss) rows."""
         rows = []
         for key, st in sorted(self.stats.items()):
             rows.append(key + (st.p50, st.p99, st.mean_loss))
@@ -1140,6 +1263,10 @@ def sweep(params: BatchedSimParams | None = None, *, progress=None
     if bp.legacy_streams and any(sc != "ring" for sc in bp.schedules):
         raise ValueError("legacy_streams=True is incompatible with "
                          "non-ring schedule sweep cells")
+    fault_grid = bp.fault_params()
+    if bp.legacy_streams and any(fp.active for fp in fault_grid):
+        raise ValueError("legacy_streams=True is incompatible with "
+                         "fault-injection sweep cells")
     for win in bp.windows:
         if WindowPolicy.parse(win).kind == "step":
             # the per-step window needs per-flow (T, n) arrays the sweep
@@ -1153,6 +1280,11 @@ def sweep(params: BatchedSimParams | None = None, *, progress=None
         for mb in bp.message_mb:
             for npods in bp.n_pods:
                 for sched in bp.schedules:
+                  for fp in fault_grid:
+                    # faults are a physics dimension: each scenario gets
+                    # its own whole-trace pass (masks live inside
+                    # _traces_shared), unlike window policies which
+                    # re-assemble one shared trace
                     p = dataclasses.replace(
                         bp.base,
                         net=dataclasses.replace(bp.base.net, n_nodes=nn),
@@ -1160,13 +1292,14 @@ def sweep(params: BatchedSimParams | None = None, *, progress=None
                             bp.base.work, message_bytes=int(mb * 2**20),
                             schedule=sched),
                         topo=dataclasses.replace(bp.base.topo,
-                                                 n_pods=npods))
+                                                 n_pods=npods),
+                        fault=fp)
                     eng = BatchedEngine(p)
                     for s in bp.seeds:
                         if progress is not None:
                             progress(f"n_nodes={nn} message_mb={mb} "
                                      f"n_pods={npods} schedule={sched} "
-                                     f"seed={s}")
+                                     f"fault={fp.tag} seed={s}")
                         tr = eng.traces(list(bp.designs), bp.n_rounds, s,
                                         legacy_streams=bp.legacy_streams)
                         to = bp.celeris_timeout_us
@@ -1183,7 +1316,7 @@ def sweep(params: BatchedSimParams | None = None, *, progress=None
                             # only the celeris budget assembly differs
                             for win in bp.windows:
                                 key = res._key(d, nn, mb, s, npods, sched,
-                                               win)
+                                               win, fp.tag)
                                 if d == "celeris":
                                     res.stats[key] = eng.assemble(
                                         tr[d], s, celeris_timeout_us=to,
@@ -1193,7 +1326,7 @@ def sweep(params: BatchedSimParams | None = None, *, progress=None
                                     for w2 in bp.windows:
                                         res.stats[res._key(
                                             d, nn, mb, s, npods, sched,
-                                            w2)] = st
+                                            w2, fp.tag)] = st
     return res
 
 

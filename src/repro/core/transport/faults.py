@@ -1,0 +1,281 @@
+"""Seeded fault injection for the batched transport engine (ISSUE 6).
+
+The paper's third headline — Celeris "nearly doubles NIC resilience to
+faults" — needs failures the contention model never produces: NICs that
+stop delivering entirely, links that go dark, rails that drop out of the
+cross-pod exchange.  This module materializes the
+:class:`~repro.core.transport.params.FaultParams` processes as
+per-``(step, node)`` / per-tier availability masks inside the engine's
+whole-trace vectorized loop — no Python step loops, flat memory (masks
+are built per round block and carried across block boundaries through
+:class:`FaultState`, exactly like the fabric burst state).
+
+Fault streams live in their own substream range (140+), disjoint from
+the engine (101-120) and DCI (130-131) streams, and are **only drawn
+when the corresponding rate is nonzero** — with ``FaultParams()``
+(the default) no generator is even constructed, so every pre-fault
+seeded trace stays bit-identical (pinned by ``tests/test_faults.py``).
+
+Vectorized process algebra
+--------------------------
+- **Stall / crash-with-restart** (duration-``k`` outages): per-block
+  Bernoulli start draws resolve to "steps since the last start" via a
+  running-max scan (``np.maximum.accumulate`` over ``where(start,
+  t, -inf)``), carried across blocks by keeping the last start index per
+  node — a node is down while ``t - last_start < k``.
+- **Permanent crash**: the same scan with infinite duration (down while
+  ``last_start >= 0``).
+- **Link flap**: a 2-state Markov on/off chain per ToR uplink (and per
+  DCI uplink on multi-pod fabrics), resolved in closed form by the same
+  last-constant-map + swap-parity composition the background burst
+  process uses (:func:`network._markov_burst`).
+- **Rail failure**: one Bernoulli draw per round; the affected flows
+  are the cross-pod (dci-tier) flows whose sender rank equals the
+  failed rail.  ``hier``'s leader exchange runs entirely on rank 0, so
+  a rail-0 failure takes out the whole DCI phase; ``perrail`` loses
+  1/m of its rails — the blast-radius asymmetry
+  ``tests/test_faults.py`` pins.
+- **Slow-NIC straggler**: a static seeded node subset whose effective
+  send rate is scaled by ``1/straggler_slowdown`` — a rate degradation,
+  not an availability event, so it shapes completion times for every
+  design but is not counted in ``fault_flows``.
+
+Design reactions (:func:`apply_to_result`)
+------------------------------------------
+A *blocked* flow (stall / flap / rail: nothing moves for the step, but
+the data still exists) wedges the reliable designs: no packets arrive,
+so no NACKs are generated and the outage is detected by timeout — RoCE
+at the full RTO, IRN/SRNIC at the low RTO — after which the chunk is
+resent from scratch (go-back-N and a fully-idle selective-repeat window
+degenerate to the same thing when *everything* was lost).  Celeris never
+waits: the bounded window simply cuts the flows the stall swallowed
+(delivered = 0, time unchanged) and the Hadamard path recovers them at
+the trainer.  A *dead* flow (crash) can never complete: reliable
+designs burn the full retry budget (``rto x (1 + max_retries)``) and
+still deliver nothing; Celeris just reports the data missing.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.transport import network
+from repro.core.transport.params import FaultParams, SimParams
+
+# Fault substreams (disjoint from engine 101-120 and DCI 130-131).
+STREAM_STALL = 140
+STREAM_CRASH = 141
+STREAM_FLAP = 142
+STREAM_FLAP_DCI = 143
+STREAM_RAIL = 144
+STREAM_STRAGGLER = 145
+
+# "never started" sentinel for the running-max outage scans
+_NEVER = np.iinfo(np.int64).min // 2
+
+
+@dataclasses.dataclass
+class FaultState:
+    """Fault-process state carried across round blocks (the fault-side
+    analogue of :class:`network.FabricState`)."""
+    stall_last: np.ndarray | None = None    # (n,) last stall-start step
+    crash_last: np.ndarray | None = None    # (n,) last crash-start step
+    flap_down: np.ndarray | None = None     # (n_tors,) link down?
+    flap_down_dci: np.ndarray | None = None  # (n_pods,) DCI link down?
+
+
+@dataclasses.dataclass
+class BlockFaults:
+    """Availability masks for one round block (``tb`` steps)."""
+    node_blocked: np.ndarray | None  # (tb, n) stalled (recoverable outage)
+    node_dead: np.ndarray | None     # (tb, n) crashed (no data ever)
+    tor_down: np.ndarray | None      # (tb, n_tors) uplink flapped down
+    dci_down: np.ndarray | None      # (tb, n_pods) DCI uplink down
+    rail_down: np.ndarray | None     # (tb,) failed-rail round?
+
+    @property
+    def any(self) -> bool:
+        return any(m is not None for m in
+                   (self.node_blocked, self.node_dead, self.tor_down,
+                    self.dci_down, self.rail_down))
+
+
+def _outage_scan(gen, rate, duration, t0, tb, n, last, targets):
+    """(down, new_last): duration-``duration`` outages from per-step
+    Bernoulli starts, resolved for the whole block at once.  ``last``
+    carries the most recent start step per node across blocks;
+    ``duration=None`` means permanent (crash without restart)."""
+    t_idx = t0 + np.arange(tb)
+    starts = gen.random((tb, n)) < rate
+    if targets is not None:
+        mask = np.zeros(n, dtype=bool)
+        mask[list(targets)] = True
+        starts &= mask[None, :]
+    last_start = np.maximum.accumulate(
+        np.where(starts, t_idx[:, None], _NEVER), axis=0)
+    last_start = np.maximum(last_start, last[None, :])
+    if duration is None:
+        down = last_start > _NEVER
+    else:
+        down = (t_idx[:, None] - last_start) < duration
+    return down, last_start[-1].copy()
+
+
+class FaultModel:
+    """Materializes one seed's failure scenario block by block.
+
+    Construct once per :meth:`BatchedEngine._traces_shared` call (only
+    when ``params.fault.active``); call :meth:`advance` once per round
+    block, in step order, then :meth:`phase_masks` per schedule phase.
+    Generators are created once and consumed sequentially, so block
+    boundaries never change the draws (same contract as the fabric
+    stream).
+    """
+
+    def __init__(self, p: SimParams, seed: int, n: int, n_tors: int,
+                 steps_per_round: int):
+        self.fp: FaultParams = p.fault
+        self.n = n
+        self.steps = steps_per_round
+        self.n_pods = p.topo.n_pods if p.topo.hierarchical else 0
+        fp = self.fp
+        self._stall_gen = (np.random.default_rng([seed, STREAM_STALL])
+                           if fp.stall_rate > 0 else None)
+        self._crash_gen = (np.random.default_rng([seed, STREAM_CRASH])
+                           if fp.crash_rate > 0 else None)
+        self._flap_gen = (np.random.default_rng([seed, STREAM_FLAP])
+                          if fp.flap_rate > 0 else None)
+        self._flap_dci_gen = (np.random.default_rng([seed, STREAM_FLAP_DCI])
+                              if fp.flap_rate > 0 and self.n_pods else None)
+        self._rail_gen = (np.random.default_rng([seed, STREAM_RAIL])
+                          if fp.rail_fail_rate > 0 else None)
+        self.state = FaultState(
+            stall_last=(np.full(n, _NEVER) if self._stall_gen is not None
+                        else None),
+            crash_last=(np.full(n, _NEVER) if self._crash_gen is not None
+                        else None),
+            flap_down=(np.zeros(n_tors, dtype=bool)
+                       if self._flap_gen is not None else None),
+            flap_down_dci=(np.zeros(self.n_pods, dtype=bool)
+                           if self._flap_dci_gen is not None else None))
+        self.n_tors = n_tors
+        # static slow-NIC subset: rate scale per node, drawn once
+        self.rate_scale = None
+        if fp.straggler_frac > 0:
+            gen = np.random.default_rng([seed, STREAM_STRAGGLER])
+            pool = (np.asarray(fp.target_nodes)
+                    if fp.target_nodes is not None else np.arange(n))
+            k = max(1, int(round(fp.straggler_frac * pool.size)))
+            slow = gen.choice(pool, size=min(k, pool.size), replace=False)
+            self.rate_scale = np.ones(n, dtype=np.float32)
+            self.rate_scale[slow] = 1.0 / fp.straggler_slowdown
+
+    # ------------------------------------------------------------------
+    def advance(self, t0: int, tb: int) -> BlockFaults:
+        """Availability masks for steps ``[t0, t0 + tb)``."""
+        fp, st = self.fp, self.state
+        blocked = dead = tor_down = dci_down = rail_down = None
+        if self._stall_gen is not None:
+            blocked, st.stall_last = _outage_scan(
+                self._stall_gen, fp.stall_rate, fp.stall_steps, t0, tb,
+                self.n, st.stall_last, fp.target_nodes)
+        if self._crash_gen is not None:
+            dur = fp.crash_restart_steps or None
+            dead, st.crash_last = _outage_scan(
+                self._crash_gen, fp.crash_rate, dur, t0, tb, self.n,
+                st.crash_last, fp.target_nodes)
+        if self._flap_gen is not None:
+            u = self._flap_gen.random((tb, 2, self.n_tors))
+            tor_down = network._markov_burst(
+                st.flap_down, u[:, 0] < fp.flap_rate,
+                u[:, 1] < fp.flap_recover_prob)
+            st.flap_down = tor_down[-1].copy()
+        if self._flap_dci_gen is not None:
+            u = self._flap_dci_gen.random((tb, 2, self.n_pods))
+            dci_down = network._markov_burst(
+                st.flap_down_dci, u[:, 0] < fp.flap_rate,
+                u[:, 1] < fp.flap_recover_prob)
+            st.flap_down_dci = dci_down[-1].copy()
+        if self._rail_gen is not None:
+            n_rounds = tb // self.steps
+            fails = self._rail_gen.random(n_rounds) < fp.rail_fail_rate
+            rail_down = np.repeat(fails, self.steps)
+        return BlockFaults(node_blocked=blocked, node_dead=dead,
+                           tor_down=tor_down, dci_down=dci_down,
+                           rail_down=rail_down)
+
+    # ------------------------------------------------------------------
+    def phase_masks(self, blk: BlockFaults, rows: np.ndarray, ph, hg,
+                    nodes_per_tor: int):
+        """(blocked, dead) ``(n_rows, n_flows)`` masks for one phase.
+
+        A flow is affected when either endpoint's NIC, either
+        endpoint's ToR uplink, or (cross-pod flows) either endpoint
+        pod's DCI uplink is unavailable; rail failures hit the
+        cross-tier flows of the failed rail.  ``dead`` (crash) wins
+        over ``blocked`` where both apply — the data is gone, not late.
+        """
+        if not blk.any:
+            return None, None
+        src, dst = ph.src, ph.dst
+        n_rows = rows.size
+        blocked = np.zeros((n_rows, src.size), dtype=bool)
+        dead = np.zeros((n_rows, src.size), dtype=bool)
+        if blk.node_blocked is not None:
+            nb = blk.node_blocked[rows]
+            blocked |= nb[:, src] | nb[:, dst]
+        if blk.node_dead is not None:
+            nd = blk.node_dead[rows]
+            dead |= nd[:, src] | nd[:, dst]
+        if blk.tor_down is not None:
+            td = blk.tor_down[rows]
+            blocked |= (td[:, src // nodes_per_tor]
+                        | td[:, dst // nodes_per_tor])
+        if blk.dci_down is not None and hg.cross.size:
+            dd = blk.dci_down[rows]
+            x = hg.cross
+            blocked[:, x] |= (dd[:, hg.src_pod[x]] | dd[:, hg.dst_pod[x]])
+        if blk.rail_down is not None and self.n_pods and hg.cross.size:
+            m = self.n // self.n_pods
+            x = hg.cross
+            on_rail = x[(src[x] % m) == (self.fp.rail % m)]
+            if on_rail.size:
+                blocked[:, on_rail] |= blk.rail_down[rows, None]
+        blocked &= ~dead
+        if not blocked.any():
+            blocked = None
+        if not dead.any():
+            dead = None
+        return blocked, dead
+
+
+def apply_to_result(design: str, res, blocked, dead, rel) -> None:
+    """Overlay one phase's fault masks onto a ``TransferResult``
+    in place (mutates ``res`` before the engine's reduction, so tier /
+    pod / coupling accounting all inherit the fault for free).
+
+    See the module docstring for the per-design semantics.  ``blocked``
+    / ``dead`` may be None (nothing of that class in this block).
+    """
+    if blocked is None and dead is None:
+        return
+    detect = {"roce": rel.rto_us, "irn": rel.rto_low_us,
+              "srnic": rel.rto_low_us + rel.host_slowpath_us}.get(design)
+    if dead is not None or design == "celeris":
+        # reliable designs return broadcast (read-only) delivered views;
+        # materialize before punching fault holes into them
+        if not res.delivered_pkts.flags.writeable:
+            res.delivered_pkts = np.array(res.delivered_pkts)
+    if blocked is not None:
+        if design == "celeris":
+            res.delivered_pkts[blocked] = 0.0
+        else:
+            # timeout-detect the silent outage, then resend the chunk
+            t = res.time_us
+            t[blocked] = 2.0 * t[blocked] + t.dtype.type(detect)
+    if dead is not None:
+        res.delivered_pkts[dead] = 0.0
+        if design != "celeris":
+            res.time_us[dead] += res.time_us.dtype.type(
+                detect * (1 + rel.max_retries))

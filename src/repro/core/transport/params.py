@@ -146,6 +146,116 @@ class WindowPolicy:
 
 
 @dataclasses.dataclass(frozen=True)
+class FaultParams:
+    """Seeded NIC / link failure processes (ISSUE 6, OptiNIC taxonomy).
+
+    All rates default to 0: the default config draws from no fault
+    stream and perturbs no existing seeded trace (pinned bit-exactly by
+    ``tests/test_faults.py``).  Faults are engine-native (shared-stream
+    mode only): each process has its own random substream derived from
+    the user seed (``faults.py``), so the same seed reproduces the same
+    failure scenario across designs and schedules.
+
+    - **NIC stall** (``stall_rate`` per node-step): delivery through the
+      node pauses for ``stall_steps`` steps — a firmware hiccup or PCIe
+      backpressure event, the paper's "NIC resilience" headline case;
+    - **NIC crash** (``crash_rate`` per node-step): the node goes dead
+      mid-round — permanently (``crash_restart_steps=0``) or until a
+      restart after that many steps;
+    - **link flap** (``flap_rate`` per edge-step): a ToR uplink (and,
+      on multi-pod fabrics, a DCI uplink) goes down/up as a Markov
+      on/off chain with recovery probability ``flap_recover_prob``;
+    - **rail failure** (``rail_fail_rate`` per round): the cross-pod
+      exchange loses rail ``rail`` for the round — under the ``hier``
+      leader exchange (leaders are rank 0) a rail-0 failure kills the
+      whole DCI phase, under ``perrail`` it kills 1/m of the rails (the
+      blast-radius experiment of PR 5's per-rail schedule);
+    - **slow-NIC straggler** (``straggler_frac`` of nodes): a static
+      seeded subset of NICs runs at ``1/straggler_slowdown`` of the
+      DCQCN-granted rate for the whole trace.
+
+    ``target_nodes`` restricts the node-level processes (stall, crash,
+    straggler) to a node subset — e.g. one pod, for the faulted-pod
+    end-to-end training experiment.
+    """
+    stall_rate: float = 0.0
+    stall_steps: int = 8
+    crash_rate: float = 0.0
+    crash_restart_steps: int = 0        # 0 => dead for the whole trace
+    flap_rate: float = 0.0
+    flap_recover_prob: float = 0.25
+    rail_fail_rate: float = 0.0
+    rail: int = 0
+    straggler_frac: float = 0.0
+    straggler_slowdown: float = 4.0
+    target_nodes: "tuple | None" = None
+
+    KINDS = ("stall", "crash", "flap", "rail", "straggler")
+
+    def __post_init__(self):
+        for name in ("stall_rate", "crash_rate", "flap_rate",
+                     "rail_fail_rate", "flap_recover_prob",
+                     "straggler_frac"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name}={v} must lie in [0, 1]")
+        if self.stall_steps < 1:
+            raise ValueError(f"stall_steps={self.stall_steps} must be >= 1")
+        if self.straggler_slowdown < 1.0:
+            raise ValueError("straggler_slowdown must be >= 1")
+        if self.target_nodes is not None:
+            object.__setattr__(self, "target_nodes",
+                               tuple(int(i) for i in self.target_nodes))
+
+    @property
+    def active(self) -> bool:
+        return (self.stall_rate > 0 or self.crash_rate > 0
+                or self.flap_rate > 0 or self.rail_fail_rate > 0
+                or self.straggler_frac > 0)
+
+    @property
+    def tag(self) -> str:
+        """Compact label for sweep keys / benchmark rows."""
+        if not self.active:
+            return "none"
+        parts = []
+        for kind, rate in (("stall", self.stall_rate),
+                           ("crash", self.crash_rate),
+                           ("flap", self.flap_rate),
+                           ("rail", self.rail_fail_rate),
+                           ("straggler", self.straggler_frac)):
+            if rate > 0:
+                parts.append(f"{kind}:{rate:g}")
+        return "+".join(parts)
+
+    @classmethod
+    def of_kind(cls, kind: str, rate: float, **kw) -> "FaultParams":
+        """One fault process by name at the given rate."""
+        field = {"stall": "stall_rate", "crash": "crash_rate",
+                 "flap": "flap_rate", "rail": "rail_fail_rate",
+                 "straggler": "straggler_frac"}.get(kind)
+        if field is None:
+            raise ValueError(f"unknown fault kind {kind!r}; choose from "
+                             f"{cls.KINDS}")
+        return cls(**{field: rate}, **kw)
+
+    @classmethod
+    def parse(cls, spec: "FaultParams | str") -> "FaultParams":
+        """CLI form ``kind:rate`` (e.g. ``stall:0.001``), ``+``-joined
+        for compound scenarios (``stall:0.001+flap:0.0005``)."""
+        if isinstance(spec, cls):
+            return spec
+        kw = {}
+        for part in str(spec).split("+"):
+            kind, _, rate = part.partition(":")
+            probe = cls.of_kind(kind.strip(), float(rate or 0.0))
+            kw.update({f.name: getattr(probe, f.name)
+                       for f in dataclasses.fields(cls)
+                       if getattr(probe, f.name) != f.default})
+        return cls(**kw)
+
+
+@dataclasses.dataclass(frozen=True)
 class WorkloadParams:
     message_bytes: int = 25 * 1024 * 1024   # 25 MB per node per round
     # collective schedule riding the fabric (core/transport/schedule.py):
@@ -164,4 +274,5 @@ class SimParams:
     rel: ReliabilityParams = ReliabilityParams()
     work: WorkloadParams = WorkloadParams()
     topo: TopologyParams = TopologyParams()
+    fault: FaultParams = FaultParams()
     seed: int = 0

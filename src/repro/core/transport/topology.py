@@ -243,10 +243,14 @@ def hier_params(n_pods: int, *, base: SimParams | None = None,
                 n_nodes: int | None = None,
                 dci_oversubscription: "float | tuple | None" = None,
                 schedule: str | None = None,
+                fault=None,
                 **topo_kw) -> SimParams:
     """A SimParams with the topology tier configured (convenience).
     ``schedule`` selects the collective schedule ("ring" | "hier",
-    see :mod:`repro.core.transport.schedule`)."""
+    see :mod:`repro.core.transport.schedule`); ``fault`` an optional
+    :class:`~repro.core.transport.params.FaultParams` (or its
+    ``kind:rate`` string form) enabling seeded fault injection on the
+    hierarchical fabric."""
     p = base or SimParams()
     if n_nodes is not None:
         p = dataclasses.replace(p, net=dataclasses.replace(
@@ -254,6 +258,9 @@ def hier_params(n_pods: int, *, base: SimParams | None = None,
     if schedule is not None:
         p = dataclasses.replace(p, work=dataclasses.replace(
             p.work, schedule=schedule))
+    if fault is not None:
+        from repro.core.transport.params import FaultParams
+        p = dataclasses.replace(p, fault=FaultParams.parse(fault))
     kw = dict(n_pods=n_pods, **topo_kw)
     if dci_oversubscription is not None:
         kw["dci_oversubscription"] = dci_oversubscription

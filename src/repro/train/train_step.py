@@ -71,7 +71,7 @@ from repro import sharding as shd
 from repro.configs.base import ModelConfig
 from repro.core import coding
 from repro.core import lossy_collectives as lc
-from repro.core.transport.coupling import CollectiveMode
+from repro.core.transport.coupling import MAX_DROP, CollectiveMode
 from repro.models import model as M
 from repro.optim import adamw
 from repro.train import sharding_rules as rules
@@ -358,7 +358,12 @@ def make_train_step(cfg: ModelConfig, mesh, opt_cfg: adamw.OptConfig,
             n_pods_mesh = _dp_size(pod_axes, mesh)
             if dr.shape[0] == n_pods_mesh + 1 and n_pods_mesh > 1:
                 intra_p = jnp.take(dr, pod_id)
-                cross = 1.0 - (1.0 - intra_p) * (1.0 - cross)
+                # both components are individually clamped at MAX_DROP
+                # by DropSchedule, but their product form can exceed it
+                # (up to 0.75) for a heavily faulted pod — hold the
+                # combined rate to the same decodability ceiling
+                cross = jnp.minimum(
+                    1.0 - (1.0 - intra_p) * (1.0 - cross), MAX_DROP)
             grads, frac = _sync_grads_celeris(
                 grads, dp, plans, key, cross, celeris, mesh, pod_id,
                 lossy_axes=pod_axes, exact_axes=data_axes)

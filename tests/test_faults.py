@@ -1,0 +1,317 @@
+"""Seeded NIC fault injection (ISSUE 6).
+
+- zero-fault guard: the default (all-rates-zero) ``FaultParams``
+  constructs no fault generators and the engine reproduces the
+  committed ring-schedule seed stats bit-exactly — the fault path can
+  never perturb existing figures;
+- seeded determinism: the same (seed, FaultParams) produces identical
+  faulted traces, different seeds differ, and every design in one
+  trace pass sees the same fault trace;
+- monotone coupling: raising a fault rate with the seed held fixed
+  only *adds* fault events (the substream's uniforms are compared to a
+  larger threshold), so delivered fractions fall monotonically;
+- blast radius: a dead rail 0 kills the whole leader DCI exchange
+  under ``hier`` (leaders are rank 0) but only 1/m of the rails under
+  ``perrail``;
+- end-to-end: a fault targeted at pod 0's nodes raises pod 0's drop
+  rate in ``split_schedule_from_engine(fault=...)``, and the
+  (n_pods+1,) vector reaches the gradients through the hierarchical
+  train step on an 8-device mesh.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.transport import (BatchedEngine, FaultParams, NetworkParams,
+                                  SimParams, coupling, sweep, topology)
+from repro.core.transport.engine import BatchedSimParams
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SMALL = SimParams(net=NetworkParams(n_nodes=32, burst_on_prob=0.0008))
+
+
+def _stats(p, design="celeris", n_rounds=40, seed=11, timeout_us=None,
+           designs=("roce", "celeris")):
+    eng = BatchedEngine(p)
+    tr = eng.traces(list(designs), n_rounds, seed, legacy_streams=False)
+    if design == "celeris":
+        if timeout_us is None:
+            base = eng.assemble(tr["roce"], seed)
+            timeout_us = float(np.percentile(base.times_us, 50)
+                               + base.times_us.std())
+        return eng.assemble(tr[design], seed, celeris_timeout_us=timeout_us,
+                            adaptive=False)
+    return eng.assemble(tr[design], seed)
+
+
+# ---------------------------------------------------- zero-fault guard
+
+def test_zero_fault_bitexact_vs_committed_seed_stats():
+    """Default FaultParams (explicit or implicit) leaves the engine
+    bit-identical to the committed pre-fault seed stats."""
+    with open(os.path.join(REPO, "tests", "data",
+                           "ring_schedule_seed_stats.json")) as f:
+        ref = json.load(f)["flat"]
+    for p in (SMALL, dataclasses.replace(SMALL, fault=FaultParams())):
+        eng = BatchedEngine(p)
+        tr = eng.traces(["roce", "celeris"], 40, 11, legacy_streams=False)
+        base = eng.assemble(tr["roce"], 11)
+        to = float((np.percentile(base.times_us, 50)
+                    + base.times_us.std()) * 0.8)
+        cel = eng.assemble(tr["celeris"], 11, celeris_timeout_us=to,
+                           adaptive=False)
+        assert np.array_equal(base.times_us, ref["roce_times_us"])
+        assert np.array_equal(cel.times_us, ref["celeris_times_us"])
+        assert np.array_equal(cel.recv_frac, ref["celeris_recv_frac"])
+        assert to == pytest.approx(ref["celeris_timeout_us"])
+        # no fault accounting is materialized on the clean path
+        assert cel.fault_steps is None
+        assert not cel.faulted.any()
+        assert cel.goodput_under_failure == 1.0
+        assert cel.recovery_rounds() == 0.0
+
+
+def test_fault_params_validation_and_parse():
+    assert not FaultParams().active
+    assert FaultParams().tag == "none"
+    fp = FaultParams.parse("stall:0.001+flap:0.0005")
+    assert fp.stall_rate == pytest.approx(0.001)
+    assert fp.flap_rate == pytest.approx(0.0005)
+    assert fp.active and fp.tag == "stall:0.001+flap:0.0005"
+    assert FaultParams.parse(fp) is fp
+    assert FaultParams.of_kind("rail", 0.3).rail_fail_rate == 0.3
+    assert FaultParams.of_kind("straggler", 0.25).straggler_frac == 0.25
+    with pytest.raises(ValueError):
+        FaultParams.of_kind("meteor", 0.1)
+    with pytest.raises(ValueError):
+        FaultParams(stall_rate=1.5)
+    with pytest.raises(ValueError):
+        FaultParams(stall_steps=0)
+    with pytest.raises(ValueError):
+        FaultParams(straggler_slowdown=0.5)
+
+
+def test_faults_require_shared_streams():
+    p = dataclasses.replace(SMALL,
+                            fault=FaultParams.of_kind("stall", 1e-3))
+    eng = BatchedEngine(p)
+    with pytest.raises(ValueError, match="legacy_streams"):
+        eng.traces(["roce"], 5, 0, legacy_streams=True)
+    # run() auto-switches instead of raising
+    st = eng.run("roce", 5, seed=0)
+    assert st.times_us.shape == (5,)
+    # and the sweep layer rejects the combination outright
+    with pytest.raises(ValueError, match="fault"):
+        sweep(BatchedSimParams(n_nodes=(32,), seeds=(0,), n_rounds=2,
+                               legacy_streams=True, faults=("stall:1e-3",),
+                               base=SMALL))
+
+
+# ------------------------------------------------- seeded determinism
+
+def test_seeded_fault_determinism_and_shared_fault_trace():
+    fp = FaultParams.of_kind("stall", 2e-3)
+    p = dataclasses.replace(SMALL, fault=fp)
+    a = _stats(p, "celeris", seed=11, timeout_us=9000.0)
+    b = _stats(p, "celeris", seed=11, timeout_us=9000.0)
+    assert np.array_equal(a.times_us, b.times_us)
+    assert np.array_equal(a.recv_frac, b.recv_frac)
+    assert np.array_equal(a.fault_steps, b.fault_steps)
+    assert np.array_equal(a.affected_flows, b.affected_flows)
+    assert a.fault_steps.sum() > 0
+    c = _stats(p, "celeris", seed=12, timeout_us=9000.0)
+    assert not np.array_equal(a.fault_steps, c.fault_steps)
+    # every design in one pass rides the same fault trace
+    eng = BatchedEngine(p)
+    tr = eng.traces(["roce", "irn", "celeris"], 20, 11,
+                    legacy_streams=False)
+    roce = eng.assemble(tr["roce"], 11)
+    irn = eng.assemble(tr["irn"], 11)
+    assert np.array_equal(roce.fault_steps, irn.fault_steps)
+    assert np.array_equal(roce.affected_flows, irn.affected_flows)
+
+
+def test_design_reactions_differ():
+    """Reliable designs pay retransmission time for the same fault
+    trace on which Celeris cuts data: RoCE's times grow, its delivery
+    stays full; Celeris's times hold, its delivery drops."""
+    fp = FaultParams.of_kind("stall", 2e-3)
+    p = dataclasses.replace(SMALL, fault=fp)
+    clean_roce = _stats(SMALL, "roce", seed=11)
+    roce = _stats(p, "roce", seed=11)
+    f = roce.faulted
+    assert f.any()
+    assert (roce.times_us[f] > clean_roce.times_us[f]).all()
+    assert roce.recv_frac.min() == 1.0
+    to = float(np.percentile(clean_roce.times_us, 50)
+               + clean_roce.times_us.std())
+    clean_cel = _stats(SMALL, "celeris", seed=11, timeout_us=to)
+    cel = _stats(p, "celeris", seed=11, timeout_us=to)
+    assert cel.p99 <= clean_cel.p99 + 1e-9      # bounded window holds
+    assert cel.recv_frac[f].mean() < clean_cel.recv_frac[f].mean()
+
+
+# ------------------------------------------------ monotone fault rate
+
+def test_goodput_monotone_in_stall_rate():
+    """Same seed, rising stall rate: fault events are supersets (the
+    substream's uniforms cross a larger threshold), so Celeris delivers
+    monotonically less data."""
+    recv = []
+    for rate in (0.0, 1e-3, 4e-3, 1.6e-2):
+        fp = FaultParams(stall_rate=rate)
+        p = dataclasses.replace(SMALL, fault=fp)
+        recv.append(_stats(p, "celeris", seed=11,
+                           timeout_us=9000.0).recv_frac.mean())
+    assert all(a >= b - 1e-12 for a, b in zip(recv, recv[1:])), recv
+    assert recv[-1] < recv[0]
+
+
+def test_straggler_slows_reliable_designs():
+    fp = FaultParams(straggler_frac=0.25, straggler_slowdown=4.0)
+    p = dataclasses.replace(SMALL, fault=fp)
+    clean = _stats(SMALL, "roce", seed=11)
+    slow = _stats(p, "roce", seed=11)
+    assert slow.times_us.mean() > clean.times_us.mean()
+    # static rate scaling marks no discrete fault events
+    assert not slow.faulted.any()
+
+
+def test_crash_restart_bounds_outage():
+    """A permanent crash (restart=0) degrades every later round; with
+    a restart the degradation is transient."""
+    base = dataclasses.replace(SMALL, fault=FaultParams(crash_rate=2e-4))
+    perm = _stats(base, "celeris", seed=11, timeout_us=9000.0)
+    rest = _stats(dataclasses.replace(
+        SMALL, fault=FaultParams(crash_rate=2e-4, crash_restart_steps=8)),
+        "celeris", seed=11, timeout_us=9000.0)
+    assert perm.faulted.sum() >= rest.faulted.sum()
+    assert perm.recv_frac.mean() <= rest.recv_frac.mean() + 1e-12
+    assert perm.faulted.any()
+
+
+# ----------------------------------------------------- rail failures
+
+def test_rail_blast_radius_smaller_under_perrail():
+    """rail 0 permanently down: under hier every leader (rank 0) rides
+    rail 0 and the whole DCI exchange dies; under perrail only 1/m of
+    the rails do."""
+    fp = FaultParams(rail_fail_rate=1.0, rail=0)
+    loss = {}
+    for sched in ("hier", "perrail"):
+        p = topology.hier_params(2, base=SMALL, schedule=sched, fault=fp)
+        loss[sched] = _stats(p, "celeris", seed=11,
+                             timeout_us=60000.0).tier_loss("dci")
+    assert loss["hier"] > 0.9                    # leader phase dead
+    m = 16                                       # 32 nodes / 2 pods
+    assert loss["perrail"] < loss["hier"] / 3
+    assert loss["perrail"] >= 1.0 / m - 1e-9
+
+
+def test_rail_affects_only_cross_tier():
+    fp = FaultParams(rail_fail_rate=1.0, rail=0)
+    p = topology.hier_params(2, base=SMALL, schedule="hier", fault=fp)
+    st = _stats(p, "celeris", seed=11, timeout_us=60000.0)
+    sched = coupling.split_schedule_from_round_stats(st)
+    assert sched.cross.mean > 0.4                # clamped at MAX_DROP
+    assert sched.intra.mean < 0.2
+
+
+# ------------------------------------------------------- sweep keys
+
+def test_sweep_fault_dimension_keys_and_clean_match():
+    bp = BatchedSimParams(
+        n_nodes=(32,), seeds=(11,), n_rounds=10,
+        designs=("roce", "celeris"), celeris_timeout_us=9000.0,
+        legacy_streams=False, base=SMALL,
+        faults=(None, "stall:4e-3"))
+    res = sweep(bp)
+    k_clean = ("roce", 32, 25.0, 11, "none")
+    k_fault = ("roce", 32, 25.0, 11, "stall:0.004")
+    assert k_clean in res.stats and k_fault in res.stats
+    # the clean cell matches a fault-free sweep bit-exactly
+    ref = sweep(dataclasses.replace(bp, faults=(None,)))
+    assert np.array_equal(res.stats[k_clean].times_us,
+                          ref.stats[("roce", 32, 25.0, 11)].times_us)
+    assert (res.stats[k_fault].times_us
+            >= res.stats[k_clean].times_us - 1e-9).all()
+
+
+# --------------------------------------------------- end-to-end (8dev)
+
+def _run(code: str, devices: int = 8, timeout: int = 420):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    return r.stdout
+
+
+def test_faulted_pod_drop_mask_reaches_gradients_8dev():
+    """Stalls targeted at pod 0's nodes -> engine -> axis-split
+    schedule: pod 0's drop rate exceeds pod 1's, and the (n_pods+1,)
+    vector drives the hierarchical train step's arrival masks — the
+    faulted pod's mask reaches the gradients and the realized received
+    fraction drops accordingly."""
+    _run("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        import repro.configs as C
+        from repro import sharding as shd
+        from repro.core.transport import (FaultParams, NetworkParams,
+                                          SimParams, coupling)
+        from repro.data.pipeline import DataConfig, make_source
+        from repro.optim.adamw import OptConfig
+        from repro.train import train_step as ts, sharding_rules as rules
+
+        SMALL = SimParams(net=NetworkParams(n_nodes=32,
+                                            burst_on_prob=0.0008))
+        fp = FaultParams(stall_rate=6e-3, stall_steps=8,
+                         target_nodes=tuple(range(16)))   # pod 0 only
+        sched = coupling.split_schedule_from_engine(
+            24, seed=11, params=SMALL, n_pods=2, n_nodes=32,
+            timeout_scale=0.8, fault=fp)
+        pp = sched.per_pod
+        assert pp is not None and len(pp) == 2
+        assert 'fault=stall:0.006' in sched.source
+        r0 = pp[0].mean + sched.cross.mean
+        r1 = pp[1].mean + sched.cross.mean
+        assert pp[0].mean > pp[1].mean + 0.01, (pp[0].mean, pp[1].mean)
+
+        mesh = shd.make_mesh((2, 4), ('pod', 'data'))
+        shd.set_global_mesh(mesh)
+        cfg = C.get_smoke('qwen2-0.5b')
+        src = make_source(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                     global_batch=8, seed=1))
+        host = src.global_batch(0, 8)
+        sp = rules.batch_specs(mesh, host)
+        batch = {k: jax.device_put(
+                     v, jax.sharding.NamedSharding(mesh, sp[k]))
+                 for k, v in host.items()}
+        fn = ts.make_train_step(cfg, mesh, OptConfig(lr=1e-3),
+                                ts.CelerisConfig(mode='hierarchical',
+                                                 min_coded_size=1024))
+        st = ts.init_state(jax.random.PRNGKey(0), cfg)
+        st = jax.device_put(st, ts.state_shardings(st, mesh))
+        dr = jnp.asarray(np.concatenate([
+            [p.mean for p in pp], [sched.cross.mean]]), jnp.float32)
+        st, m = fn(st, batch, jax.random.PRNGKey(1), dr)
+        frac = float(m['recv_frac'])
+        comb = [min(1 - (1 - p.mean) * (1 - sched.cross.mean), 0.5)
+                for p in pp]
+        want = 1.0 - sum(comb) / len(comb)
+        assert abs(frac - want) < 0.06, (frac, want)
+        assert frac < 1.0
+        assert np.isfinite(float(m['loss']))
+        print('OK')
+    """)
