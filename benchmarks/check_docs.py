@@ -1,0 +1,97 @@
+"""Docs health gate (CI `docs` job + tier-1 test).
+
+Two checks, both cheap and hermetic:
+
+1. **Intra-repo markdown links resolve.**  Every ``[text](target)``
+   in README.md, ROADMAP.md and docs/*.md whose target is not an
+   external URL or a pure ``#anchor`` must point at an existing file
+   (anchors on existing files are accepted; we don't parse heading
+   slugs).
+2. **Benchmark figure scripts import.**  Every ``benchmarks/fig*.py``
+   must import cleanly and expose a ``run`` callable — the docs/RESULTS
+   table points readers at these entry points, so a renamed or broken
+   module is a stale-docs bug even when CI's smoke tier doesn't call
+   it.  ``examples/*.py`` must import cleanly too (they're the README's
+   onboarding path); their ``main()`` is not run.
+
+Exit code 0 = healthy; 1 = problems (listed on stdout).
+
+    PYTHONPATH=src python benchmarks/check_docs.py
+"""
+import glob
+import importlib
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# [text](target) — excluding images' src use is fine to include too
+_LINK_RE = re.compile(r"\[[^\]^\[]*\]\(([^)\s]+)\)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def _md_files():
+    files = [os.path.join(REPO, "README.md"),
+             os.path.join(REPO, "ROADMAP.md")]
+    files += sorted(glob.glob(os.path.join(REPO, "docs", "*.md")))
+    return [f for f in files if os.path.exists(f)]
+
+
+def check_links() -> list:
+    problems = []
+    for md in _md_files():
+        rel_md = os.path.relpath(md, REPO)
+        base = os.path.dirname(md)
+        with open(md) as f:
+            text = f.read()
+        for m in _LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(_EXTERNAL) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0]
+            resolved = os.path.normpath(os.path.join(base, path))
+            if not os.path.exists(resolved):
+                line = text[: m.start()].count("\n") + 1
+                problems.append(f"{rel_md}:{line}: broken link -> {target}")
+    return problems
+
+
+def check_imports() -> list:
+    problems = []
+    sys.path.insert(0, REPO)                      # benchmarks package
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    figs = sorted(glob.glob(os.path.join(REPO, "benchmarks", "fig*.py")))
+    for f in figs:
+        mod = "benchmarks." + os.path.splitext(os.path.basename(f))[0]
+        try:
+            m = importlib.import_module(mod)
+            if not callable(getattr(m, "run", None)):
+                problems.append(f"{mod}: no callable run()")
+        except Exception as e:                      # noqa: BLE001
+            problems.append(f"{mod}: import failed: {e!r}")
+    for f in sorted(glob.glob(os.path.join(REPO, "examples", "*.py"))):
+        name = os.path.relpath(f, REPO)
+        try:
+            code = compile(open(f).read(), f, "exec")
+            scope = {"__name__": "examples_smoke", "__file__": f}
+            exec(code, scope)                       # imports only: main()
+            if not callable(scope.get("main")):     # is __main__-gated
+                problems.append(f"{name}: no main() entry point")
+        except Exception as e:                      # noqa: BLE001
+            problems.append(f"{name}: import failed: {e!r}")
+    return problems
+
+
+def main() -> int:
+    problems = check_links() + check_imports()
+    for p in problems:
+        print(p)
+    n_md = len(_md_files())
+    print(f"checked {n_md} markdown files, benchmarks/fig*.py and "
+          f"examples/*.py: {len(problems)} problem(s)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

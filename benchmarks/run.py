@@ -33,7 +33,7 @@ if _REPO_ROOT not in sys.path:
 # check_regression.py separately skips the _wall_s/_us/kernel timing
 # keys, which are machine-dependent)
 _KEY_PREFIXES = ("fig1e2e_", "fig2_", "fig3_", "fig4_", "fig5_", "fig6_",
-                 "fig7_", "kernel_", "smoke_")
+                 "fig7_", "fig8_", "kernel_", "smoke_")
 
 _DEFAULT_OUT = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_sim.json")
@@ -44,7 +44,8 @@ def run_full(quick: bool):
                             fig2_tail_latency, fig1_e2e_loss_tolerance,
                             fig3_scale_sweep, fig4_cross_pod_tail,
                             fig5_schedule_tail, fig6_scale_schedule,
-                            fig7_fault_resilience, kernel_bench, roofline)
+                            fig7_fault_resilience, fig8_serving_tail,
+                            kernel_bench, roofline)
     rows = []
     rows += table1_qp_state.run()
     rows += table2_resources.run()
@@ -65,6 +66,7 @@ def run_full(quick: bool):
     rows += fig7_fault_resilience.run(steps=25 if quick else 40,
                                       n_rounds=40 if quick else 60,
                                       scale_cell=not quick)
+    rows += fig8_serving_tail.run(n_rounds=120 if quick else 300)
     rows += kernel_bench.run()
     rows += roofline.run()
     return rows
@@ -74,12 +76,12 @@ def run_smoke():
     """CI tier: one engine A/B + kernels + one e2e lossy step + one
     2-pod topology case + one ring-vs-hier schedule A/B + one
     window-policy (round-vs-phase) A/B + one stall fault-injection
-    cell, about a minute, exercising the same code paths as the full
-    run."""
+    cell + one serving incast sweep, about a minute, exercising the
+    same code paths as the full run."""
     from benchmarks import (fig2_tail_latency, fig1_e2e_loss_tolerance,
                             fig4_cross_pod_tail, fig5_schedule_tail,
                             fig6_scale_schedule, fig7_fault_resilience,
-                            kernel_bench)
+                            fig8_serving_tail, kernel_bench)
     from repro.core.transport import SimParams, NetworkParams
     rows = []
     rows += fig2_tail_latency.run(
@@ -93,6 +95,7 @@ def run_smoke():
     rows += fig5_schedule_tail.run(smoke=True, prefix="smoke_fig5")
     rows += fig6_scale_schedule.run(smoke=True, prefix="smoke_fig6")
     rows += fig7_fault_resilience.run(smoke=True, prefix="smoke_fig7")
+    rows += fig8_serving_tail.run(smoke=True, prefix="smoke_fig8")
     rows += [(f"smoke_{n}" if n.startswith("kernel_") else n, v, r)
              for n, v, r in kernel_bench.run()]
     return rows

@@ -1,13 +1,21 @@
-"""Batched serving example: prefill a batch of prompts, decode with a KV
-cache (ring caches on local-attention layers), report tokens/s.
+"""Batched serving example: prefill a batch of prompts, greedy-decode
+with a KV cache, report tokens/s — optionally after shipping the caches
+through the lossy-transport wire layout (the fig8 serve path).
 
     PYTHONPATH=src python examples/serve_batched.py --arch gemma2-9b
+    PYTHONPATH=src python examples/serve_batched.py --arch qwen2-0.5b \
+        --kv-frac 0.9            # decode from Hadamard-coded lossy KV
+
+Uses the host mesh helper (``launch/mesh.py``) + sharding registry like
+the production launcher (``repro.launch.serve``); drop ``--mesh`` to
+run unsharded.
 """
 import argparse
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 import repro.configs as C
 from repro.models import model as M
@@ -20,7 +28,17 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--mesh", action="store_true",
+                    help="shard over a host (data, model) mesh")
+    ap.add_argument("--kv-frac", type=float, default=1.0,
+                    help="delivered KV fraction; < 1 ships the caches "
+                         "through the coded wire layout before decoding")
     args = ap.parse_args()
+
+    if args.mesh:
+        from repro import sharding as shd
+        from repro.launch import mesh as mesh_mod
+        shd.set_global_mesh(mesh_mod.make_host_mesh())
 
     cfg = C.get_smoke(args.arch)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
@@ -30,21 +48,29 @@ def main():
     s_max = args.prompt_len + args.gen
 
     prefill = serve_step.make_prefill(cfg, s_max)
-    decode = serve_step.make_decode(cfg)
-
     t0 = time.perf_counter()
     logits, caches = prefill(params, {"tokens": prompt})
     jax.block_until_ready(logits)
     t_prefill = time.perf_counter() - t0
-    tok = jnp.argmax(logits, -1)[:, None]
+    first = jnp.argmax(logits, -1)[:, None]
+
+    if args.kv_frac < 1.0:
+        # prefill -> decode KV transfer over the lossy transport: the
+        # delivered fraction becomes a wire-row hole mask and the
+        # decode runs from Hadamard-decoded caches (serve/traffic.py
+        # maps engine rounds to these fractions in fig8)
+        from repro.core.transport import coupling
+        mask = jnp.asarray(coupling.kv_hole_masks(
+            np.array([args.kv_frac]), 64, seed=0)[0])
+        caches = serve_step.degrade_caches(caches, mask,
+                                           jax.random.PRNGKey(2))
+        print(f"KV shipped at delivered fraction {args.kv_frac:g} "
+              f"({64 - int(mask.sum())}/64 wire rows lost, coded)")
 
     t0 = time.perf_counter()
-    out = [tok]
-    for i in range(args.gen - 1):
-        logits, caches = decode(params, caches, {"tokens": out[-1]},
-                                jnp.int32(args.prompt_len + i))
-        out.append(jnp.argmax(logits, -1)[:, None])
-    jax.block_until_ready(out[-1])
+    out = serve_step.greedy_decode(cfg, params, caches, first,
+                                   args.prompt_len, args.gen)
+    jax.block_until_ready(out)
     t_dec = time.perf_counter() - t0
 
     total = args.batch * (args.gen - 1)
@@ -53,7 +79,7 @@ def main():
           f"{t_prefill*1e3:.1f} ms")
     print(f"decode: {total} tokens in {t_dec:.2f}s -> "
           f"{total/t_dec:.1f} tok/s (CPU container)")
-    print("sample:", jnp.concatenate(out, 1)[0, :16].tolist())
+    print("sample:", out[0, :16].tolist())
 
 
 if __name__ == "__main__":

@@ -407,3 +407,37 @@ class HierStragglerModel(EngineStragglerModel):
     @property
     def schedules(self) -> AxisSchedules:
         return self.schedule
+
+
+# ----------------------------------------------------------------------
+# Serve-path coupling: delivered KV fractions -> per-request hole masks
+# ----------------------------------------------------------------------
+
+def kv_hole_masks(kv_frac: np.ndarray, n_rot: int, seed: int = 0
+                  ) -> np.ndarray:
+    """Seeded per-request wire-row arrival masks for KV-cache shipping.
+
+    The serve path's analogue of :func:`schedule_from_engine`: where
+    training turns delivered fractions into per-step drop schedules,
+    serving turns each request's delivered KV fraction (from
+    ``serve.traffic.simulate_serving`` — the block-weighted mean of the
+    engine's ``recv_frac`` over the rounds that shipped it) into a
+    ``(n_req, n_rot)`` boolean mask over wire rows.  Row ``j`` arriving
+    means coordinate ``j`` of every Hadamard rotation block survived
+    the window (``core.coding``'s wire layout); losing it uncoded
+    means a hole in every block at that coordinate, while the coded
+    path unbiases over the surviving rows
+    (``serve_step.degrade_caches`` applies both).
+
+    Masks are Bernoulli(kv_frac) per row on the seeded
+    ``serve.traffic.STREAM_KV_HOLES`` substream — independent rows, the
+    same loss model the trainer's lossy modes assume per step.
+    Requests with ``kv_frac == 1`` get all-true masks (bit-safe: the
+    draw is still consumed, keeping masks per-request reproducible
+    regardless of which other requests were cut).
+    """
+    from repro.serve import traffic as _traffic   # cycle-free late import
+    kv_frac = np.asarray(kv_frac, dtype=float)
+    rng = np.random.default_rng([seed, _traffic.STREAM_KV_HOLES])
+    u = rng.random((kv_frac.size, n_rot))
+    return u < kv_frac[:, None]

@@ -90,7 +90,11 @@ def transfer(design: str, n_pkts: int, occ: np.ndarray, rate: np.ndarray,
                 # losses within the retransmitted burst
                 remaining = rng.binomial(n_resend, pf)
                 tail_lost = tail_lost & (rng.random(idx.size) < pf)
-            t.ravel()[idx] += ex.astype(t.dtype)
+            # .flat, not .ravel(): the batched engine can hand in
+            # non-C-contiguous blocks (large advanced-indexed phase
+            # views), where ravel() silently returns a copy and the
+            # in-place update would be lost
+            t.flat[idx] += ex.astype(t.dtype)
         return TransferResult(t, full, full)
 
     if design in ("irn", "srnic"):
@@ -109,7 +113,7 @@ def transfer(design: str, n_pkts: int, occ: np.ndarray, rate: np.ndarray,
             # selective-repeat second round for re-lost packets
             k2 = rng.binomial(k, pf)
             ex += np.where(k2 > 0, rel.rto_low_us + k2 * ptf, 0.0)
-            t.ravel()[idx] += ex.astype(t.dtype)
+            t.flat[idx] += ex.astype(t.dtype)
         return TransferResult(t, full, full)
 
     if design == "celeris":
@@ -117,7 +121,7 @@ def transfer(design: str, n_pkts: int, occ: np.ndarray, rate: np.ndarray,
         delivered = np.full(shape, n_pkts, dtype=serialize.dtype)
         if idx.size:
             pf = np.ascontiguousarray(drop_p).ravel()[idx]
-            delivered.ravel()[idx] -= rng.binomial(n_pkts, pf)
+            delivered.flat[idx] -= rng.binomial(n_pkts, pf)
         # no recovery: wire time only; lost packets never arrive.
         # Streaming push -> queue latency mostly hidden (see above).
         t = (serialize + CELERIS_QUEUE_OVERLAP * queue_delay

@@ -86,6 +86,7 @@ _STREAM_CNP_ROCE = 102     # CNP draws on the RoCE legacy trace
 _STREAM_PFC = 103          # PFC cascade draws (shared-fabric mode only)
 _STREAM_TRANSFER = {"roce": 110, "irn": 111, "srnic": 111, "celeris": 112}
 _STREAM_WINDOW = 120       # bounded-window controller observation noise
+_STREAM_INCAST_CNP = 150   # CNP draws on incast (fan_in > 1) flow columns
 
 # Round-block sizing: bound the (step, node) chunk to this many elements
 # so peak memory is flat in cluster size (~12 live f64 temporaries).
@@ -279,17 +280,28 @@ class StepTrace:
 
 
 class BatchedEngine:
-    """Vectorized collective simulator over ``(step, node)`` tensors."""
+    """Vectorized flow-plan simulator over ``(step, node)`` tensors.
 
-    def __init__(self, params: SimParams | None = None):
+    Times one :class:`~repro.core.transport.schedule.FlowPlan` per
+    round — by default the collective plan named by
+    ``params.work.schedule``, or an arbitrary point-to-point plan
+    passed as ``plan=`` (e.g. the serve path's incast KV-transfer
+    plans from ``serve.traffic``, which require
+    ``legacy_streams=False`` like every non-ring plan).
+    """
+
+    def __init__(self, params: SimParams | None = None, *,
+                 plan: "schedule_mod.FlowPlan | None" = None):
         self.p = params or SimParams()
+        self.plan_override = plan
 
     # ------------------------------------------------------------------
     def _geometry(self, seed: int):
         p = self.p
         net = p.net
         n = net.n_nodes
-        plan = schedule_mod.make_plan(net, p.topo, p.work)
+        plan = (self.plan_override if self.plan_override is not None
+                else schedule_mod.make_plan(net, p.topo, p.work))
         geo = dict(
             n=n, steps=plan.steps_per_round, plan=plan,
             n_pkts=max(1, (p.work.message_bytes // n) // net.mtu_bytes),
@@ -422,6 +434,11 @@ class BatchedEngine:
             raise ValueError(
                 f"schedule={self.p.work.schedule!r} requires "
                 "legacy_streams=False (shared-fabric mode)")
+        if self.plan_override is not None and legacy_streams:
+            # arbitrary flow plans are engine-native by definition
+            raise ValueError(
+                "a FlowPlan override requires legacy_streams=False "
+                "(shared-fabric mode)")
         if self.p.fault.active and legacy_streams:
             # faults are engine-native processes with their own
             # substreams; the replayed sequential streams predate them
@@ -635,6 +652,26 @@ class BatchedEngine:
         ph_steps = [np.flatnonzero(plan.phase_of_step == k)
                     for k in range(len(plan.phases))]
 
+        # incast columns (flows whose receiver takes > 1 concurrent
+        # sender): every collective schedule is a permutation, so these
+        # are empty there — the overlay below constructs nothing, draws
+        # nothing, and the trace stays bit-identical to the fan-in-1
+        # engine.  Point-to-point plans (serve KV shipping) populate
+        # them, and their receiver ports get an occupancy floor of
+        # 1 - 1/fan (fan senders sharing one egress link) plus
+        # fan-way egress serialization in phase pass 2.
+        ph_fan = [ph.fan_in() for ph in plan.phases]
+        ph_inc = [np.flatnonzero(f > 1) for f in ph_fan]
+        # single-phase fast paths (no row/column re-indexing) apply only
+        # when the phase's senders are exactly the identity over all n
+        # nodes — true for the flat ring, not necessarily for a
+        # point-to-point plan with idle nodes
+        identity_plan = plan.single_phase and np.array_equal(
+            plan.phases[0].src, np.arange(n))
+        incast = any(inc.size for inc in ph_inc)
+        if incast:
+            inc_cnp_gen = np.random.default_rng([seed, _STREAM_INCAST_CNP])
+
         # seeded fault processes (params.FaultParams): generators are
         # created once and consumed per block, like the fabric stream;
         # inactive configs construct nothing and draw nothing, keeping
@@ -691,6 +728,21 @@ class BatchedEngine:
                                < ecn_p[hot])
                 if hier:
                     topology.dci_cnp_draws(hgs[k], ecn_p, cnp_ph, dci_cnp_gen)
+                inc = ph_inc[k]
+                if inc.size:
+                    # incast overlay, pass 1: the receiver's egress port
+                    # runs at >= 1 - 1/fan occupancy whenever its fan
+                    # senders offer load, regardless of background
+                    # bursts — curves and CNP marking on those columns
+                    # follow the raised occupancy (own substream: the
+                    # shared CNP stream's consumption must not shift)
+                    occ_inc = np.maximum(occ32[:, inc],
+                                         (1.0 - 1.0 / ph_fan[k][inc]
+                                          ).astype(occ32.dtype))
+                    occ32[:, inc] = occ_inc
+                    ecn_inc = network.ecn_mark_prob(net, occ_inc)
+                    drop_p[:, inc] = network.drop_prob(net, occ_inc)
+                    cnp_ph[:, inc] = inc_cnp_gen.random(occ_inc.shape) < ecn_inc
                 cnp[np.ix_(rows, ph.src)] = cnp_ph
                 ph_data.append([rows, occ32, drop_p, occ_eff])
 
@@ -709,12 +761,19 @@ class BatchedEngine:
             for k, ph in enumerate(plan.phases):
                 rows, occ32, drop_p, occ_eff = ph_data[k]
                 qd = network.queue_delay_us(net, occ32)
-                rate_ph = (rate if plan.single_phase
+                rate_ph = (rate if identity_plan
                            else rate[np.ix_(rows, ph.src)])
                 eff_rate = rate_ph * network.avail_bandwidth(net, occ32)
                 if hier:
                     topology.overlay_rates(net, p.topo, hgs[k], occ_eff,
                                            rate_ph, occ32, qd, eff_rate)
+                inc = ph_inc[k]
+                if inc.size:
+                    # incast overlay, pass 2: queueing and bandwidth
+                    # already follow the raised occ32 from pass 1; on
+                    # top, fan senders share the receiver's one egress
+                    # link, so each flow serializes at 1/fan of it
+                    eff_rate[:, inc] /= ph_fan[k][inc]
                 blocked = dead = None
                 if fmodel is not None:
                     if fmodel.rate_scale is not None:
@@ -1049,6 +1108,9 @@ class BatchedEngine:
             # fault processes are engine-native (their substreams have
             # no sequential-simulator counterpart to replay)
             legacy_streams = False
+        if self.plan_override is not None:
+            # arbitrary flow plans exist only in shared-fabric mode
+            legacy_streams = False
         tr = self.traces([design], n_rounds, seed,
                          legacy_streams=legacy_streams, per_node_for=keep)
         return self.assemble(tr[design], seed,
@@ -1250,8 +1312,16 @@ class SweepResult:
 
 def sweep(params: BatchedSimParams | None = None, *, progress=None
           ) -> SweepResult:
-    """Run the sweep grid; designs share one physics pass per (config,
-    seed).  ``progress``: optional callable(str) for liveness logging."""
+    """Run the grid in :class:`BatchedSimParams`; one engine pass per
+    ``(n_nodes, message_mb, n_pods, schedule, fault, seed)`` cell, with
+    every design and window policy assembled from that cell's shared
+    physics trace (designs differ in loss reaction, windows only in
+    budget assembly — both axes are nearly free).  Result keys follow
+    the :class:`SweepResult` ordering convention: ``(design, n_nodes,
+    message_mb, seed)`` plus trailing ``[n_pods][, schedule][, window]
+    [, fault]`` elements appended *only* for axes the grid actually
+    sweeps (see docs/ARCHITECTURE.md).  ``progress``: optional
+    ``callable(str)`` for liveness logging on long grids."""
     bp = params or BatchedSimParams()
     if bp.legacy_streams and any(np_ > 1 for np_ in bp.n_pods):
         # same contract as BatchedEngine.traces: there is no flat

@@ -257,8 +257,10 @@ def pfc_pause_trace(p: NetworkParams, occ: np.ndarray,
         if idx.size == 0:
             break
         survive = rng.random(idx.size) < p.pfc_cascade_prob
-        alive.ravel()[idx] = survive
-        total.ravel()[idx] += np.where(survive, p.pfc_pause_us, 0.0)
+        # .flat, not .ravel(): ravel() copies on non-contiguous blocks
+        # and the write would be lost (see designs.transfer)
+        alive.flat[idx] = survive
+        total.flat[idx] += np.where(survive, p.pfc_pause_us, 0.0)
     return total
 
 

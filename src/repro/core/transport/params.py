@@ -115,7 +115,13 @@ class ReliabilityParams:
 
 @dataclasses.dataclass(frozen=True)
 class WindowPolicy:
-    """How the Celeris bounded budget binds one AllReduce round.
+    """How the Celeris bounded budget binds one engine round.
+
+    A "round" is one pass over the active :class:`FlowPlan` — a
+    collective AllReduce for the ring/hier/perrail schedules, or an
+    arbitrary point-to-point plan (e.g. the serve path's KV-transfer
+    incast).  The policy decides where inside the round the budget
+    truncates:
 
     - ``"round"`` — one deadline for the whole round (the paper's
       adaptive-timeout policy; bit-exact with the pre-policy engine);

@@ -1,15 +1,29 @@
-"""Pluggable collective communication schedules.
+"""Point-to-point flow plans and the collective schedules built on them.
 
 The engine used to hardcode one communication pattern: a flat
 ``2(N-1)``-step ring whose every step moves ``message/N`` bytes between
 ring neighbors — even across a multi-pod hierarchy, so the DCI
 oversubscription penalty was charged to *every* hop instead of only the
 cross-pod exchange.  This module extracts that choice into data: a
-:class:`CollectiveSchedule` produces a :class:`SchedulePlan` — the
-per-round sequence of steps, each step a set of concurrent flows with
-``(src, dst, tier, payload_bytes)`` — that the engine's vectorized
-trace loop consumes (``BatchedEngine._traces_shared`` times one phase
-block at a time) and the coupling layer reads for its step→tier map.
+:class:`FlowPlan` — the per-round sequence of steps, each step a set of
+concurrent flows with ``(src, dst, tier, payload_bytes)`` — that the
+engine's vectorized trace loop consumes
+(``BatchedEngine._traces_shared`` times one phase block at a time) and
+the coupling layer reads for its step→tier map.
+
+A plan's flows are *arbitrary* static point-to-point sets, not just
+collective rings: :func:`flow_plan` builds a validated plan from any
+phase list (each node sends at most one flow per phase — the engine's
+``(step, node)`` tensors scatter by sender column), and a
+:class:`CollectiveSchedule` is simply a named factory producing the
+degenerate case where every receiver has exactly one sender.  Plans
+where several flows share a receiver (``SchedulePhase.fan_in() > 1``)
+describe **incast** — e.g. the serve path's many-prefill→few-decode
+KV-cache shipping (``serve/traffic.py``) — and the engine overlays
+per-receiver contention on exactly those flows (occupancy floor
+``1 - 1/fan`` at the receiver port plus ``fan``-way egress
+serialization), leaving fan-in-1 plans bit-identical to the
+pre-FlowPlan engine.
 
 Steps group into *phases*: contiguous step runs sharing one static flow
 pattern and per-step payload, so each phase stays a dense
@@ -50,7 +64,7 @@ Per-phase window budgets: every phase carries a ``budget_frac`` weight
 (defaulting to its nominal serialization share, ``n_steps x
 payload_bytes``, with DCI phases additionally weighted by the mean
 oversubscription ratio — the "wait longer where the fabric is slow"
-policy).  :meth:`SchedulePlan.budget_fracs` normalizes the weights into
+policy).  :meth:`FlowPlan.budget_fracs` normalizes the weights into
 the per-phase split of the Celeris round budget that the engine's
 ``window="phase"`` assembly applies (see ``params.WindowPolicy``).
 
@@ -95,17 +109,39 @@ class SchedulePhase:
     budget_frac: float | None = None   # window-budget weight (un-normalized)
 
     def n_pkts(self, net: NetworkParams) -> int:
+        """Packets per flow per step (payload split at the MTU, >= 1)."""
         return max(1, self.payload_bytes // net.mtu_bytes)
 
     @property
     def budget_weight(self) -> float:
+        """Un-normalized per-phase window-budget weight (see class doc)."""
         return (float(self.n_steps * self.payload_bytes)
                 if self.budget_frac is None else float(self.budget_frac))
 
+    def fan_in(self) -> np.ndarray:
+        """(n_flows,) receivers' concurrent-sender count per flow.
+
+        ``fan_in[i]`` is how many of this phase's flows share flow
+        ``i``'s destination.  Every collective schedule here is a
+        permutation (one sender per receiver) so the array is all ones;
+        values > 1 mark incast flows, which the engine charges with
+        per-receiver contention (see module docstring).
+        """
+        counts = np.bincount(self.dst, minlength=int(self.dst.max()) + 1)
+        return counts[self.dst]
+
 
 @dataclasses.dataclass(frozen=True, eq=False)
-class SchedulePlan:
-    """One round of a collective schedule, resolved for a topology."""
+class FlowPlan:
+    """One round of point-to-point flow phases, resolved for a topology.
+
+    The engine's unit of work: ``phases`` are executed in order every
+    round, each contributing ``n_steps`` rows to the round's
+    ``(step, flow)`` tensor blocks.  Collective schedules produce
+    fan-in-1 plans (``SchedulePlan`` is the historical alias); arbitrary
+    plans — incast, parameter-server, all-to-all phase sets — come from
+    :func:`flow_plan`.
+    """
     schedule: str
     phases: tuple              # of SchedulePhase, in execution order
     steps_per_round: int
@@ -114,6 +150,11 @@ class SchedulePlan:
     @property
     def single_phase(self) -> bool:
         return len(self.phases) == 1
+
+    def max_fan_in(self) -> int:
+        """Largest per-receiver concurrent-sender count over all phases
+        (1 for every collective schedule; > 1 marks an incast plan)."""
+        return max(int(ph.fan_in().max()) for ph in self.phases)
 
     def geometries(self, net: NetworkParams, topo: TopologyParams) -> tuple:
         """Per-phase :class:`topology.HierGeometry` (flow→tier maps)."""
@@ -187,13 +228,52 @@ class SchedulePlan:
                    for ph in self.phases)
 
 
-def _mk_plan(name: str, phases) -> SchedulePlan:
+# Historical alias: collective schedules predate arbitrary flow plans,
+# and the engine/coupling layers grew up on this name.
+SchedulePlan = FlowPlan
+
+
+def _mk_plan(name: str, phases) -> FlowPlan:
     phases = tuple(ph for ph in phases if ph.n_steps > 0)
     steps = sum(ph.n_steps for ph in phases)
     phase_of_step = np.repeat(np.arange(len(phases)),
                               [ph.n_steps for ph in phases])
-    return SchedulePlan(schedule=name, phases=phases, steps_per_round=steps,
-                        phase_of_step=phase_of_step)
+    return FlowPlan(schedule=name, phases=phases, steps_per_round=steps,
+                    phase_of_step=phase_of_step)
+
+
+def flow_plan(name: str, phases) -> FlowPlan:
+    """Build a validated :class:`FlowPlan` from arbitrary static phases.
+
+    The engine's contract per phase: ``src``/``dst`` same length, no
+    self-flows, and **unique senders** — the ``(step, node)`` tensors
+    have one column per node, so a node may drive at most one flow per
+    step.  Receivers may repeat freely (that is what makes a plan an
+    incast plan).  Empty phases (``n_steps == 0``) are dropped, matching
+    the collective factories.
+    """
+    for ph in phases:
+        if ph.n_steps == 0:
+            continue                    # dropped by _mk_plan below
+        src, dst = np.asarray(ph.src), np.asarray(ph.dst)
+        if src.shape != dst.shape or src.ndim != 1 or src.size == 0:
+            raise ValueError(
+                f"phase {ph.name!r}: src/dst must be equal-length 1-D "
+                f"non-empty arrays, got {src.shape} vs {dst.shape}")
+        if np.unique(src).size != src.size:
+            raise ValueError(
+                f"phase {ph.name!r}: duplicate senders — each node "
+                "drives at most one flow per step (the engine's "
+                "(step, node) tensors scatter by sender column)")
+        if (src == dst).any():
+            raise ValueError(f"phase {ph.name!r}: self-flows (src == dst)")
+        if ph.payload_bytes < 1:
+            raise ValueError(
+                f"phase {ph.name!r}: payload_bytes must be >= 1")
+    plan = _mk_plan(name, phases)
+    if not plan.phases:
+        raise ValueError("flow plan has no non-empty phases")
+    return plan
 
 
 class CollectiveSchedule:

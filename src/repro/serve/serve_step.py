@@ -14,12 +14,15 @@ cache read, linear in B).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import coding
+from repro.models import layers as L
 from repro.models import model as M
 
 
@@ -53,6 +56,23 @@ def make_decode(cfg: ModelConfig):
     return jax.jit(decode, donate_argnums=(1,))
 
 
+def greedy_decode(cfg: ModelConfig, params, caches, first_token: jax.Array,
+                  start_idx: int, n_steps: int):
+    """Greedy host-loop decode from an existing (possibly degraded) KV
+    cache: ``first_token`` (B, 1) seeds the loop, ``start_idx`` is the
+    cache position of the first generated token.  Returns
+    (B, n_steps) tokens including ``first_token``."""
+    decode = make_decode(cfg)
+    out = [first_token]
+    idx = start_idx
+    for _ in range(n_steps - 1):
+        logits, caches = decode(params, caches,
+                                {"tokens": out[-1]}, jnp.int32(idx))
+        out.append(jnp.argmax(logits, -1)[:, None])
+        idx += 1
+    return jnp.concatenate(out, axis=1)
+
+
 def greedy_generate(cfg: ModelConfig, params, prompt: jax.Array,
                     n_steps: int, s_max: Optional[int] = None,
                     extra: Optional[Dict[str, Any]] = None):
@@ -60,13 +80,104 @@ def greedy_generate(cfg: ModelConfig, params, prompt: jax.Array,
     s_max = s_max or (prompt.shape[1] + n_steps)
     batch = {"tokens": prompt, **(extra or {})}
     prefill = make_prefill(cfg, s_max)
-    decode = make_decode(cfg)
     logits, caches = prefill(params, batch)
-    out = [jnp.argmax(logits, -1)[:, None]]
-    idx = prompt.shape[1]
-    for t in range(n_steps - 1):
-        logits, caches = decode(params, caches,
-                                {"tokens": out[-1]}, jnp.int32(idx))
-        out.append(jnp.argmax(logits, -1)[:, None])
-        idx += 1
-    return jnp.concatenate(out, axis=1)
+    first = jnp.argmax(logits, -1)[:, None]
+    return greedy_decode(cfg, params, caches, first, prompt.shape[1], n_steps)
+
+
+# ----------------------------------------------------------------------
+# Degraded-KV decode: ship caches through the lossy transport's wire
+# layout (serve/traffic.py -> coupling.kv_hole_masks -> here)
+# ----------------------------------------------------------------------
+
+def kv_wire_roundtrip(flat: jax.Array, mask: jax.Array, signs: jax.Array,
+                      code: coding.HadamardCode, *, coded: bool = True
+                      ) -> jax.Array:
+    """One flat KV payload through the wire: encode (or just block),
+    drop the wire rows where ``mask`` is 0, decode.
+
+    ``mask`` (n_rot,) is one request's transport-block arrival mask
+    (``coupling.kv_hole_masks`` row) — the payload ships as ``n_rot``
+    transport blocks either way, and the same block indices are lost
+    either way; the two layouts differ in what a block *carries*:
+
+    - ``coded=True``: block ``j`` is wire row ``j`` of the Hadamard
+      layout — coordinate ``j`` of every rotation block.  Lost rows
+      are unbiased over by ``core.coding.decode``, so the damage is
+      small dense noise spread across the entire payload.
+    - ``coded=False``: block ``j`` is the ``j``-th *contiguous chunk*
+      of the raw payload (how an uncoded sender packs KV).  Lost
+      chunks are holes: whole spans of cache positions zeroed —
+      exactly the trainer's plain-lossy ablation, applied to serving.
+    """
+    mask = mask.astype(flat.dtype)
+    if coded:
+        wire = coding.encode(flat, signs, code, use_pallas=False)
+        wire = wire * mask[:, None]
+        return coding.decode(wire, mask, signs, code, total_peers=1,
+                             use_pallas=False)
+    x = jnp.pad(flat.reshape(-1), (0, code.padded_len - code.orig_len))
+    chunks = x.reshape(code.n_rot, code.n_blocks) * mask[:, None]
+    return chunks.reshape(-1)[: code.orig_len]
+
+
+def degrade_caches(caches, mask: jax.Array, key: jax.Array, *,
+                   coded: bool = True):
+    """Apply one request's KV-transfer loss to its decode caches.
+
+    Every attention layer's K and V tensors are flattened, shipped
+    through :func:`kv_wire_roundtrip` under the same wire-row mask
+    (all of a request's KV blocks ride the same cut rounds), and
+    restored in place; recurrent state and cache positions are
+    metadata the transport does not code, and pass through untouched.
+    ``key`` seeds the shared rotation signs — prefill and decode sides
+    must agree on it, exactly like the trainer's coded all-reduce.
+    """
+    def _ship(leaf):
+        code = coding.plan(int(leaf.size), n_rot=int(mask.shape[0]))
+        if code.n_rot != int(mask.shape[0]):
+            raise ValueError(
+                f"KV leaf of {leaf.size} elements cannot carry a "
+                f"{mask.shape[0]}-row wire mask (plan chose {code.n_rot})")
+        signs = coding.rademacher(key, code)
+        out = kv_wire_roundtrip(leaf.reshape(-1).astype(jnp.float32),
+                                mask, signs, code, coded=coded)
+        return out.reshape(leaf.shape).astype(leaf.dtype)
+
+    def _one(node):
+        if not isinstance(node, L.AttnCache):
+            return node
+        return dataclasses.replace(node, k=_ship(node.k), v=_ship(node.v))
+
+    return jax.tree_util.tree_map(
+        _one, caches, is_leaf=lambda x: isinstance(x, L.AttnCache))
+
+
+def kv_position_error(clean, degraded, n_ctx: int):
+    """(n_ctx,) per-position relative KV error after lossy transfer.
+
+    For each cache position ``s < n_ctx`` (the prefilled context), the
+    relative L2 error of its K/V vectors aggregated over every
+    attention layer — the serving counterpart of the trainer's
+    gradient-error metric.  An uncoded lost chunk drives whole
+    positions to error ~1 (their context is simply gone at the decode
+    node); the coded path spreads the same loss as uniform small noise
+    across all positions.  ``usable fraction`` (positions under an
+    error threshold) is fig8's recovery metric.
+    """
+    def _leaves(tree):
+        nodes = jax.tree_util.tree_leaves(
+            tree, is_leaf=lambda x: isinstance(x, L.AttnCache))
+        return [n for n in nodes if isinstance(n, L.AttnCache)]
+
+    err2 = jnp.zeros(n_ctx)
+    ref2 = jnp.zeros(n_ctx)
+    for c0, c1 in zip(_leaves(clean), _leaves(degraded)):
+        for a0, a1 in ((c0.k, c1.k), (c0.v, c1.v)):
+            # (..., S, kv, hd): fold everything but the position axis
+            s_ax = a0.ndim - 3
+            d = jnp.moveaxis((a1 - a0) ** 2, s_ax, 0)
+            r = jnp.moveaxis(a0.astype(jnp.float32) ** 2, s_ax, 0)
+            err2 = err2 + d[:n_ctx].reshape(n_ctx, -1).sum(1)
+            ref2 = ref2 + r[:n_ctx].reshape(n_ctx, -1).sum(1)
+    return jnp.sqrt(err2 / jnp.maximum(ref2, 1e-12))

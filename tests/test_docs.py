@@ -1,0 +1,29 @@
+"""Docs layer stays healthy (ISSUE 7 satellite).
+
+Runs ``benchmarks/check_docs.py`` — intra-repo markdown links in
+README/ROADMAP/docs/ resolve, every ``benchmarks/fig*.py`` imports and
+exposes ``run()``, every ``examples/*.py`` imports and exposes
+``main()`` — exactly what the CI docs job runs, so a broken link or a
+stale example fails tier-1 locally first."""
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_docs_links_and_entry_points():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run(
+        [sys.executable, os.path.join(REPO, "benchmarks", "check_docs.py")],
+        capture_output=True, text=True, timeout=420, env=env, cwd=REPO)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+
+
+def test_docs_exist_and_readme_points_at_them():
+    for f in ("docs/ARCHITECTURE.md", "docs/RESULTS.md"):
+        assert os.path.exists(os.path.join(REPO, f)), f
+    readme = open(os.path.join(REPO, "README.md")).read()
+    assert "docs/ARCHITECTURE.md" in readme
+    assert "docs/RESULTS.md" in readme

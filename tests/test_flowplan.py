@@ -1,0 +1,160 @@
+"""Point-to-point flow plans (ISSUE 7 tentpole acceptance tests).
+
+- the built-in ring expressed as an explicit :func:`schedule.flow_plan`
+  reproduces the committed ring seed stats bit-for-bit through the
+  engine's plan-override path (collective schedule = degenerate flow
+  plan, zero drift);
+- :func:`schedule.flow_plan` validation: shape mismatches, duplicate
+  senders, self-flows, empty plans;
+- incast accounting: ``fan_in``/``max_fan_in`` on the serve KV plan,
+  byte conservation between plan and engine packet exposure;
+- incast physics: the same flow set with a higher fan-in receiver pod
+  is strictly slower per round, and a fan-in-1 plan matches the
+  no-overlay baseline streams (the overlay draws nothing).
+"""
+import json
+import os
+
+import dataclasses
+import numpy as np
+import pytest
+
+from repro.core.transport import (BatchedEngine, NetworkParams, SimParams,
+                                  schedule)
+from repro.serve import traffic
+
+SMALL = SimParams(net=NetworkParams(n_nodes=32, burst_on_prob=0.0008))
+
+
+def _pinned():
+    path = os.path.join(os.path.dirname(__file__), "data",
+                        "ring_schedule_seed_stats.json")
+    return json.load(open(path))
+
+
+def _ring_as_flow_plan(n: int, message_bytes: int) -> schedule.FlowPlan:
+    """The flat ring rebuilt from raw (src, dst, payload) flows."""
+    src = np.arange(n)
+    ring = schedule.SchedulePhase(
+        name="ring", src=src, dst=(src + 1) % n,
+        n_steps=2 * (n - 1), payload_bytes=message_bytes // n)
+    return schedule.flow_plan("ring_explicit", (ring,))
+
+
+def test_ring_flow_plan_bitexact_vs_committed_seed_stats():
+    """Engine with plan= the explicit ring == committed ring stats,
+    bit for bit (times, recv_frac, derived window)."""
+    ref = _pinned()["flat"]
+    n = SMALL.net.n_nodes
+    plan = _ring_as_flow_plan(n, SMALL.work.message_bytes)
+    eng = BatchedEngine(SMALL, plan=plan)
+    tr = eng.traces(["roce", "celeris"], 40, seed=11, legacy_streams=False)
+    base = eng.assemble(tr["roce"], 11)
+    np.testing.assert_array_equal(base.times_us,
+                                  np.array(ref["roce_times_us"]))
+    to = float(np.percentile(base.times_us, 50) + base.times_us.std()) * 0.8
+    assert to == ref["celeris_timeout_us"]
+    cel = eng.assemble(tr["celeris"], 11, celeris_timeout_us=to,
+                       adaptive=False, window="round")
+    np.testing.assert_array_equal(cel.times_us,
+                                  np.array(ref["celeris_times_us"]))
+    np.testing.assert_array_equal(cel.recv_frac,
+                                  np.array(ref["celeris_recv_frac"]))
+
+
+def test_plan_override_refuses_legacy_streams():
+    plan = _ring_as_flow_plan(32, SMALL.work.message_bytes)
+    eng = BatchedEngine(SMALL, plan=plan)
+    with pytest.raises(ValueError, match="legacy"):
+        eng.traces(["roce"], 4, 0, legacy_streams=True)
+
+
+# ------------------------------------------------ flow_plan validation
+
+def test_flow_plan_validation_errors():
+    ph = dict(n_steps=2, payload_bytes=1 << 10)
+    mk = lambda src, dst, **kw: schedule.SchedulePhase(
+        name="x", src=np.asarray(src), dst=np.asarray(dst), **{**ph, **kw})
+    with pytest.raises(ValueError, match="length"):
+        schedule.flow_plan("bad", (mk([0, 1], [2]),))
+    with pytest.raises(ValueError, match="sender"):
+        schedule.flow_plan("bad", (mk([0, 0], [1, 2]),))
+    with pytest.raises(ValueError, match="self"):
+        schedule.flow_plan("bad", (mk([0, 1], [0, 2]),))
+    with pytest.raises(ValueError, match="payload"):
+        schedule.flow_plan("bad", (mk([0], [1], payload_bytes=0),))
+    with pytest.raises(ValueError, match="non-empty"):
+        schedule.flow_plan("bad", ())
+
+
+def test_flow_plan_drops_empty_phases():
+    ph = schedule.SchedulePhase(name="kv", src=np.array([0]),
+                                dst=np.array([1]), n_steps=2,
+                                payload_bytes=1 << 10)
+    empty = schedule.SchedulePhase(name="idle", src=np.array([], int),
+                                   dst=np.array([], int), n_steps=0,
+                                   payload_bytes=1 << 10)
+    plan = schedule.flow_plan("p", (empty, ph))
+    assert len(plan.phases) == 1 and plan.phases[0].name == "kv"
+
+
+# ------------------------------------------------- incast accounting
+
+def test_kv_plan_fan_in_and_byte_conservation():
+    tp = traffic.ServeTrafficParams(n_prefill=28, n_decode=4)
+    plan = traffic.kv_flow_plan(tp)
+    (ph,) = plan.phases
+    # every prefill node sends exactly once; receivers are decode nodes
+    assert ph.src.size == tp.n_prefill
+    assert np.array_equal(np.sort(ph.src), np.arange(tp.n_prefill))
+    assert set(ph.dst) <= set(range(tp.n_prefill, tp.n_nodes))
+    # fan-in: each decode node takes n_prefill/n_decode senders
+    fan = ph.fan_in()
+    assert fan.shape == ph.src.shape
+    assert fan.sum() == sum(np.count_nonzero(ph.dst == d) ** 2
+                            for d in np.unique(ph.dst))
+    assert plan.max_fan_in() == tp.fan_in == 7
+    # plan bytes == blocks the queue model ships per round
+    assert (plan.bytes_per_round()
+            == tp.capacity_blocks_per_round * tp.kv_block_bytes)
+    # engine packet exposure matches the plan's own accounting
+    net = traffic.serve_net_params(tp)
+    eng = BatchedEngine(SimParams(net=net), plan=plan)
+    tr = eng.traces(["celeris"], 2, 0, legacy_streams=False)
+    assert tr["celeris"].total.sum() == 2 * ph.src.size * ph.n_steps \
+        * ph.n_pkts(net)
+
+
+def test_incast_monotone_in_fan():
+    """Same 24 senders, decode pod shrunk 8 -> 2: per-round natural
+    time grows strictly with fan-in (receiver egress serialization)."""
+    t = {}
+    for ndec in (8, 2):
+        tp = traffic.ServeTrafficParams(n_prefill=24, n_decode=ndec,
+                                        steps_per_round=4)
+        net = traffic.serve_net_params(tp)
+        eng = BatchedEngine(
+            SimParams(net=dataclasses.replace(net, burst_on_prob=0.0008)),
+            plan=traffic.kv_flow_plan(tp))
+        tr = eng.traces(["celeris"], 20, 3, legacy_streams=False)
+        t[ndec] = np.median(tr["celeris"].nat_us.reshape(20, -1).sum(1))
+    assert t[2] > 2.5 * t[8]
+
+
+def test_fan_in_one_plan_keeps_baseline_streams():
+    """A point-to-point plan with no incast (fan 1) must not consume
+    the incast substream: its trace equals one where the overlay code
+    is unreachable (disjoint pairs = permutation subset)."""
+    src = np.arange(8)
+    ph = schedule.SchedulePhase(name="p2p", src=src, dst=src + 8,
+                                n_steps=4, payload_bytes=1 << 18)
+    plan = schedule.flow_plan("pairs", (ph,))
+    assert plan.max_fan_in() == 1
+    eng = BatchedEngine(SMALL, plan=plan)
+    tr = eng.traces(["roce", "celeris"], 10, 7, legacy_streams=False)
+    # deterministic replay: same seed, same plan -> identical trace
+    tr2 = BatchedEngine(SMALL, plan=plan).traces(
+        ["roce", "celeris"], 10, 7, legacy_streams=False)
+    for d in ("roce", "celeris"):
+        np.testing.assert_array_equal(tr[d].nat_us, tr2[d].nat_us)
+        np.testing.assert_array_equal(tr[d].deliv, tr2[d].deliv)
