@@ -7,6 +7,20 @@
     PYTHONPATH=src python examples/transport_study.py --faults stall:1e-4
     PYTHONPATH=src python examples/transport_study.py --multi-pod \
         --schedule perrail --faults rail:0.3
+
+Tail attribution (the flight recorder, ``transport.telemetry``) —
+``--trace OUT.json`` runs the engine with a ``TraceRecorder`` attached
+and writes a Chrome/Perfetto ``trace_event`` JSON (open in
+ui.perfetto.dev; see docs/OBSERVABILITY.md):
+
+    PYTHONPATH=src python examples/transport_study.py \
+        --trace results/trace.json
+    PYTHONPATH=src python examples/transport_study.py --nodes 512 \
+        --rounds 40 --trace results/trace_512.json
+    PYTHONPATH=src python examples/transport_study.py \
+        --faults stall:1e-4 --trace results/trace_faulted.json
+    PYTHONPATH=src python examples/transport_study.py --multi-pod \
+        --trace results/trace_hier.json
 """
 import argparse
 import dataclasses
@@ -15,12 +29,22 @@ import numpy as np
 
 from repro.core.transport import (BatchedEngine, BatchedSimParams,
                                   CollectiveSimulator, DESIGNS, FaultParams,
-                                  SimParams, TIERS, coupling, hier_params,
-                                  hier_protocol, sweep)
+                                  SimParams, TIERS, TraceRecorder, coupling,
+                                  hier_params, hier_protocol, sweep,
+                                  write_trace)
+
+
+def _dump_trace(rec, path, **meta):
+    obj = write_trace(rec, path, meta=meta or None)
+    n = sum(1 for e in obj["traceEvents"] if e["ph"] == "X")
+    print(f"\nwrote {path} ({n} slices, schema-validated) — open in "
+          "ui.perfetto.dev")
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--rounds", type=int, default=200)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--sweep-timeout", action="store_true",
@@ -49,25 +73,36 @@ def main():
                          "crash:3e-5, flap:1e-3, rail:0.3, "
                          "straggler:0.25; '+'-join for compound "
                          "scenarios (params.FaultParams)")
+    ap.add_argument("--trace", type=str, default=None, metavar="OUT.json",
+                    help="attach the flight recorder and write a "
+                         "Chrome/Perfetto trace_event JSON of the run "
+                         "(per-round and per-phase tail attribution; "
+                         "transport.telemetry + trace_export)")
     args = ap.parse_args()
     fault = FaultParams.parse(args.faults) if args.faults else None
+    if args.trace and (args.scale_sweep or args.sweep_timeout):
+        ap.error("--trace supports the default, --faults and "
+                 "--multi-pod modes (the sweeps run many engines)")
 
     sim = CollectiveSimulator(SimParams())
 
-    if args.faults and not args.multi_pod:
-        # faults are engine-native (shared-stream mode): run the paper
-        # protocol through BatchedEngine with the fault overlay active
-        p = dataclasses.replace(
-            SimParams(net=dataclasses.replace(SimParams().net,
-                                              n_nodes=args.nodes)),
-            fault=fault)
-        eng = BatchedEngine(p)
+    if (args.faults or args.trace) and not args.multi_pod:
+        # engine-native (shared-stream) mode: the fault overlay and the
+        # flight recorder both require it; stats stay bit-exact either
+        # way (the recorder is a pure overlay)
+        p = SimParams(net=dataclasses.replace(SimParams().net,
+                                              n_nodes=args.nodes))
+        if fault is not None:
+            p = dataclasses.replace(p, fault=fault)
+        rec = TraceRecorder() if args.trace else None
+        eng = BatchedEngine(p, recorder=rec)
         tr = eng.traces(list(DESIGNS), args.rounds, args.seed,
                         legacy_streams=False)
         base = eng.assemble(tr["roce"], args.seed)
         to = float(np.percentile(base.times_us, 50) + base.times_us.std())
-        print(f"faults={fault.tag} nodes={args.nodes} "
-              f"rounds={args.rounds}")
+        print((f"faults={fault.tag} " if fault else "")
+              + f"nodes={args.nodes} rounds={args.rounds}"
+              + (" [flight recorder on]" if rec else ""))
         print(f"{'design':10s} {'p50 ms':>8s} {'p99 ms':>8s} "
               f"{'loss %':>7s} {'faulted':>8s} {'gupf':>6s} "
               f"{'rec rounds':>11s}")
@@ -80,28 +115,39 @@ def main():
                   f"{int(s.faulted.sum()):4d}/{s.faulted.size:<3d} "
                   f"{s.goodput_under_failure:6.3f} "
                   f"{s.recovery_rounds():11.2f}")
+        if rec is not None:
+            _dump_trace(rec, args.trace, mode="flat", nodes=args.nodes,
+                        faults=fault.tag if fault else "none")
         return
 
     if args.multi_pod:
         print(f"schedule={args.schedule} window={args.window}"
-              + (f" faults={fault.tag}" if fault else ""))
+              + (f" faults={fault.tag}" if fault else "")
+              + (" [flight recorder on]" if args.trace else ""))
         print(f"{'pods':>5s} {'oversub':>8s} {'p99 ms':>8s} "
               + "".join(f"{'loss% ' + t:>12s}" for t in TIERS)
               + f" {'sched intra/cross %':>20s}")
+        rec = None
         for npods in (2, 4, 8):
             for ov in (2.0, 8.0):
                 p = hier_params(npods, n_nodes=args.nodes,
                                 dci_oversubscription=ov,
                                 schedule=args.schedule, fault=fault)
+                # a recorder serves one traces() pass: record the last
+                # cell of the grid (the exported one — noted below)
+                rec = TraceRecorder() if args.trace else None
                 cel = hier_protocol(p, n_rounds=args.rounds,
-                                    seed=args.seed,
-                                    window=args.window)["celeris"]
+                                    seed=args.seed, window=args.window,
+                                    recorder=rec)["celeris"]
                 sched = coupling.split_schedule_from_round_stats(cel)
                 print(f"{npods:5d} {ov:8.0f} {cel.p99/1e3:8.2f} "
                       + "".join(f"{cel.tier_loss(t)*100:12.3f}"
                                 for t in TIERS)
                       + f" {sched.intra.mean*100:9.2f}/"
                         f"{sched.cross.mean*100:.2f}")
+        if rec is not None:
+            _dump_trace(rec, args.trace, mode="multi-pod",
+                        cell="pods=8 oversub=8", schedule=args.schedule)
         return
 
     if args.scale_sweep:

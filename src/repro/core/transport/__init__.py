@@ -17,6 +17,11 @@ from repro.core.transport.coupling import (
     HierStragglerModel, LatencyTail, closed_form_schedule,
     schedule_from_engine, schedule_from_round_stats,
     split_schedule_from_engine, split_schedule_from_round_stats)
+from repro.core.transport.telemetry import (
+    CAUSES, COMPONENTS, ConservationError, DesignRecord, DropProvenance,
+    TraceRecorder, audit_round, provenance_from_record, provenance_heuristic)
+from repro.core.transport.trace_export import (
+    to_trace_events, validate_trace, write_trace)
 
 __all__ = [
     "SimParams", "NetworkParams", "DcqcnParams", "ReliabilityParams",
@@ -31,4 +36,8 @@ __all__ = [
     "HierStragglerModel", "LatencyTail", "closed_form_schedule",
     "schedule_from_engine", "schedule_from_round_stats",
     "split_schedule_from_engine", "split_schedule_from_round_stats",
+    "CAUSES", "COMPONENTS", "ConservationError", "DesignRecord",
+    "DropProvenance", "TraceRecorder", "audit_round",
+    "provenance_from_record", "provenance_heuristic",
+    "to_trace_events", "validate_trace", "write_trace",
 ]

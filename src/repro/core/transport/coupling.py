@@ -50,7 +50,7 @@ from math import erf, sqrt
 
 import numpy as np
 
-from repro.core.transport import topology
+from repro.core.transport import telemetry, topology
 from repro.core.transport.engine import BatchedEngine, RoundStats
 from repro.core.transport.params import SimParams
 
@@ -119,9 +119,18 @@ class DropSchedule:
     ``rates[i]`` is the drop probability for train step i; steps past
     the end wrap around (an engine trace is a stationary sample of the
     fabric, so tiling it is the natural extension).
+
+    ``provenance`` (a :class:`telemetry.DropProvenance`, when the
+    schedule came from engine stats) attributes each step's dropped
+    fraction to its originating (tier, cause, phase): exact when the
+    engine ran with a :class:`telemetry.TraceRecorder`, heuristic
+    (fault-exposed rounds → "fault", remainder → the design's natural
+    loss mode) otherwise.  Provenance keeps the *unclipped* physical
+    split; ``rates`` stays clamped to ``MAX_DROP`` as before.
     """
     rates: np.ndarray
     source: str = "constant"
+    provenance: "telemetry.DropProvenance | None" = None
 
     def __post_init__(self):
         object.__setattr__(
@@ -148,11 +157,21 @@ class DropSchedule:
 
 
 def schedule_from_round_stats(stats: RoundStats, *,
-                              source: str | None = None) -> DropSchedule:
-    """Engine round statistics → per-step schedule (round i ≡ step i)."""
+                              source: str | None = None,
+                              record: "telemetry.DesignRecord | None" = None
+                              ) -> DropSchedule:
+    """Engine round statistics → per-step schedule (round i ≡ step i).
+
+    Pass the matching :class:`telemetry.DesignRecord` (from the
+    recorder the engine ran with) for exact per-cause provenance on the
+    schedule; without it a coarse heuristic attribution is attached.
+    """
+    prov = (telemetry.provenance_from_record(record, "flat")
+            if record is not None
+            else telemetry.provenance_heuristic(stats, "flat"))
     return DropSchedule(
         rates=1.0 - np.asarray(stats.recv_frac, dtype=np.float64),
-        source=source or f"engine:{stats.design}")
+        source=source or f"engine:{stats.design}", provenance=prov)
 
 
 def schedule_from_engine(n_rounds: int, seed: int = 0, *,
@@ -163,7 +182,8 @@ def schedule_from_engine(n_rounds: int, seed: int = 0, *,
                          timeout_scale: float = 1.0,
                          adaptive: bool = False,
                          window: str = "round",
-                         legacy_streams: bool = False) -> DropSchedule:
+                         legacy_streams: bool = False,
+                         record: bool = False) -> DropSchedule:
     """Run the transport engine and derive the drop schedule it implies.
 
     The Celeris window follows the paper protocol — fixed at the RoCE
@@ -176,6 +196,11 @@ def schedule_from_engine(n_rounds: int, seed: int = 0, *,
 
     Lossless designs ("roce", "irn", "srnic") yield all-zero schedules —
     useful as the exact-collective control.
+
+    ``record=True`` runs the engine with a ``telemetry.TraceRecorder``
+    (shared-fabric mode required, the default here) so the returned
+    schedule's ``provenance`` carries the exact per-(tier, cause,
+    phase) attribution instead of the stats-level heuristic.
     """
     p = params or SimParams()
     if n_nodes is not None:
@@ -185,10 +210,11 @@ def schedule_from_engine(n_rounds: int, seed: int = 0, *,
         p = dataclasses.replace(
             p, work=dataclasses.replace(p.work,
                                         message_bytes=int(message_mb * 2**20)))
-    eng = BatchedEngine(p)
+    rec = telemetry.TraceRecorder() if record else None
+    eng = BatchedEngine(p, recorder=rec)
     designs_needed = [design] if design != "celeris" else ["roce", "celeris"]
     tr = eng.traces(designs_needed, n_rounds, seed,
-                    legacy_streams=legacy_streams)
+                    legacy_streams=legacy_streams and not record)
     if design != "celeris":
         stats = eng.assemble(tr[design], seed)
     else:
@@ -199,7 +225,9 @@ def schedule_from_engine(n_rounds: int, seed: int = 0, *,
                              adaptive=adaptive, window=window)
     tag = (f"engine:{design} n={p.net.n_nodes} seed={seed} "
            f"scale={timeout_scale}" + (" adaptive" if adaptive else ""))
-    return schedule_from_round_stats(stats, source=tag)
+    return schedule_from_round_stats(
+        stats, source=tag,
+        record=rec.record(design) if rec is not None else None)
 
 
 # ----------------------------------------------------------------------
@@ -246,8 +274,9 @@ class AxisSchedules:
 
 
 def split_schedule_from_round_stats(stats: RoundStats, *,
-                                    source: str | None = None
-                                    ) -> AxisSchedules:
+                                    source: str | None = None,
+                                    record: "telemetry.DesignRecord | None"
+                                    = None) -> AxisSchedules:
     """Engine per-tier round statistics → axis-split schedules.
 
     Tier fractions (topology.TIERS order: tor, spine, dci) combine into
@@ -265,6 +294,12 @@ def split_schedule_from_round_stats(stats: RoundStats, *,
     ``pod_pkts``-weighted mean recombines to the aggregate intra rate
     exactly (same delivered packets, regrouped by pod instead of by
     tier).
+
+    The intra and cross schedules carry :class:`telemetry
+    .DropProvenance` — exact per-(tier, cause, phase) when ``record``
+    (the engine run's :class:`telemetry.DesignRecord`) is given,
+    heuristic otherwise.  Per-pod schedules share the intra axis's
+    heuristic tag only (pod-resolved cause attribution is not tracked).
     """
     if stats.tier_recv_frac is None or stats.tier_counts is None:
         raise ValueError(
@@ -281,6 +316,12 @@ def split_schedule_from_round_stats(stats: RoundStats, *,
         intra = np.zeros(f.shape[0])
     cross = (1.0 - f[:, 2]) if w[2] > 0 else np.zeros(f.shape[0])
     tag = source or f"engine:{stats.design}"
+    if record is not None:
+        prov_i = telemetry.provenance_from_record(record, "intra")
+        prov_c = telemetry.provenance_from_record(record, "cross")
+    else:
+        prov_i = telemetry.provenance_heuristic(stats, "intra")
+        prov_c = telemetry.provenance_heuristic(stats, "cross")
     per_pod = None
     if stats.pod_recv_frac is not None:
         pf = np.asarray(stats.pod_recv_frac, dtype=np.float64)
@@ -288,8 +329,10 @@ def split_schedule_from_round_stats(stats: RoundStats, *,
             DropSchedule(rates=1.0 - pf[:, p], source=f"{tag}:pod{p}")
             for p in range(pf.shape[1]))
     return AxisSchedules(
-        intra=DropSchedule(rates=intra, source=tag + ":intra"),
-        cross=DropSchedule(rates=cross, source=tag + ":cross"),
+        intra=DropSchedule(rates=intra, source=tag + ":intra",
+                           provenance=prov_i),
+        cross=DropSchedule(rates=cross, source=tag + ":cross",
+                           provenance=prov_c),
         per_pod=per_pod, source=tag)
 
 
@@ -302,7 +345,8 @@ def split_schedule_from_engine(n_rounds: int, seed: int = 0, *,
                                schedule: str | None = None,
                                window: str = "round",
                                timeout_scale: float = 1.0,
-                               fault=None) -> AxisSchedules:
+                               fault=None,
+                               record: bool = False) -> AxisSchedules:
     """Run the hierarchical engine and derive the axis-split schedule.
 
     Same window rule as :func:`schedule_from_engine` (RoCE baseline on
@@ -320,16 +364,22 @@ def split_schedule_from_engine(n_rounds: int, seed: int = 0, *,
     ``kind:rate`` string form): the faulted run's per-pod loss then
     charges the faulted pods' drop masks in hierarchical train steps —
     the end-to-end path of the fig7 resilience experiment.
+    ``record=True`` attaches exact per-(tier, cause, phase)
+    provenance from a ``telemetry.TraceRecorder`` run.
     """
     p = topology.hier_params(n_pods, base=params, n_nodes=n_nodes,
                              dci_oversubscription=dci_oversubscription,
                              schedule=schedule, fault=fault)
+    rec = telemetry.TraceRecorder() if record else None
     stats = topology.hier_protocol(p, n_rounds, seed, window=window,
-                                   timeout_scale=timeout_scale)["celeris"]
+                                   timeout_scale=timeout_scale,
+                                   recorder=rec)["celeris"]
     tag = (f"engine:celeris n={p.net.n_nodes} pods={n_pods} "
            f"sched={p.work.schedule} window={window} seed={seed} "
            f"scale={timeout_scale} fault={p.fault.tag}")
-    return split_schedule_from_round_stats(stats, source=tag)
+    return split_schedule_from_round_stats(
+        stats, source=tag,
+        record=rec.record("celeris") if rec is not None else None)
 
 
 

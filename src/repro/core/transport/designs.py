@@ -51,7 +51,8 @@ class TransferResult:
 def transfer(design: str, n_pkts: int, occ: np.ndarray, rate: np.ndarray,
              drop_p: np.ndarray, pfc_pause: np.ndarray, queue_delay: np.ndarray,
              rel: ReliabilityParams, net: NetworkParams,
-             rng: np.random.Generator) -> TransferResult:
+             rng: np.random.Generator,
+             parts: dict | None = None) -> TransferResult:
     """Completion time of an n_pkts chunk per concurrent flow.
 
     Shape-polymorphic: every per-flow array may carry arbitrary leading
@@ -61,17 +62,30 @@ def transfer(design: str, n_pkts: int, occ: np.ndarray, rate: np.ndarray,
     paper's drop probability is exactly 0 below the loss knee, >90% of
     entries under the burst process); the distribution per entry is
     unchanged, only the draw order differs from a dense sweep.
+
+    ``parts`` is the telemetry scratchpad (``telemetry.TraceRecorder``):
+    when a dict is passed, the component arrays this function already
+    computes — serialization, queueing, RTT, PFC pause, retransmit
+    time, wire-lost packets — are recorded into it, scalar or
+    full-shape, *without touching the arithmetic or the draw streams*:
+    recording must never change the seeded physics.
     """
     shape = occ.shape
     pkt_time = net.pkt_time_us / np.maximum(rate, 1e-3)
     serialize = n_pkts * pkt_time
     full = np.broadcast_to(np.float64(n_pkts), shape)
+    if parts is not None:
+        parts["serialize"] = serialize
+        parts["rtt"] = net.base_rtt_us / 2
 
     if design == "roce":
         p = drop_p * PFC_DROP_SUPPRESSION
         idx = np.flatnonzero(p > 0)
         t = serialize + queue_delay + net.base_rtt_us / 2
         t += pfc_pause
+        if parts is not None:
+            parts["queue"] = queue_delay
+            parts["pfc"] = pfc_pause
         if idx.size:
             pf = np.ascontiguousarray(p).ravel()[idx]
             ptf = np.ascontiguousarray(pkt_time).ravel()[idx]
@@ -95,11 +109,17 @@ def transfer(design: str, n_pkts: int, occ: np.ndarray, rate: np.ndarray,
             # views), where ravel() silently returns a copy and the
             # in-place update would be lost
             t.flat[idx] += ex.astype(t.dtype)
+            if parts is not None:
+                rx = np.zeros(shape)
+                rx.flat[idx] = ex
+                parts["retransmit"] = rx
         return TransferResult(t, full, full)
 
     if design in ("irn", "srnic"):
         idx = np.flatnonzero(drop_p > 0)
         t = serialize + queue_delay + net.base_rtt_us / 2
+        if parts is not None:
+            parts["queue"] = queue_delay
         if idx.size:
             pf = np.ascontiguousarray(drop_p).ravel()[idx]
             ptf = np.ascontiguousarray(pkt_time).ravel()[idx]
@@ -114,6 +134,10 @@ def transfer(design: str, n_pkts: int, occ: np.ndarray, rate: np.ndarray,
             k2 = rng.binomial(k, pf)
             ex += np.where(k2 > 0, rel.rto_low_us + k2 * ptf, 0.0)
             t.flat[idx] += ex.astype(t.dtype)
+            if parts is not None:
+                rx = np.zeros(shape)
+                rx.flat[idx] = ex
+                parts["retransmit"] = rx
         return TransferResult(t, full, full)
 
     if design == "celeris":
@@ -126,6 +150,9 @@ def transfer(design: str, n_pkts: int, occ: np.ndarray, rate: np.ndarray,
         # Streaming push -> queue latency mostly hidden (see above).
         t = (serialize + CELERIS_QUEUE_OVERLAP * queue_delay
              + net.base_rtt_us / 2)
+        if parts is not None:
+            parts["queue"] = CELERIS_QUEUE_OVERLAP * queue_delay
+            parts["wire_lost"] = np.asarray(full - delivered, np.float64)
         return TransferResult(t, delivered, full)
 
     raise ValueError(design)

@@ -291,9 +291,15 @@ class BatchedEngine:
     """
 
     def __init__(self, params: SimParams | None = None, *,
-                 plan: "schedule_mod.FlowPlan | None" = None):
+                 plan: "schedule_mod.FlowPlan | None" = None,
+                 recorder: "telemetry_mod.TraceRecorder | None" = None):
         self.p = params or SimParams()
         self.plan_override = plan
+        # opt-in flight recorder (telemetry.TraceRecorder): a pure
+        # overlay on the shared-fabric pass — it reads the component
+        # arrays the physics already computes and draws nothing, so
+        # seeded stats are bit-identical with or without it
+        self.recorder = recorder
 
     # ------------------------------------------------------------------
     def _geometry(self, seed: int):
@@ -445,6 +451,13 @@ class BatchedEngine:
             raise ValueError(
                 "fault injection (FaultParams) requires "
                 "legacy_streams=False (shared-fabric mode)")
+        if self.recorder is not None and legacy_streams:
+            # the recorder hooks ride the shared-fabric per-phase pass;
+            # the replayed sequential path has no component arrays to
+            # attribute from
+            raise ValueError(
+                "a TraceRecorder requires legacy_streams=False "
+                "(shared-fabric mode)")
         if legacy_streams:
             return self._traces_legacy(design_list, n_rounds, seed,
                                        per_node_for)
@@ -680,6 +693,11 @@ class BatchedEngine:
                   if p.fault.active else None)
         fault_flows = np.zeros(T) if fmodel is not None else None
 
+        rec = self.recorder
+        if rec is not None:
+            rec.begin(design_list, plan=plan, n_rounds=n_rounds,
+                      steps=steps)
+
         ph_pod_cols = ([hg.pod_cols for hg in hgs] if hier else None)
         out = self._new_traces(
             design_list, T, steps, n, per_node_for,
@@ -786,6 +804,12 @@ class BatchedEngine:
                     fault_flows[t0 + rows] = nf
                 ph_data[k] = (rows, occ32, drop_p, qd, eff_rate,
                               blocked, dead)
+                if rec is not None:
+                    # design-independent fabric counters for the export
+                    # counter tracks (pure reductions, no draws)
+                    rec.record_fabric(
+                        t0 + rows,
+                        network.congestion_counters(net, occ32, drop_p), T)
 
             for d in design_list:
                 for k, ph in enumerate(plan.phases):
@@ -794,15 +818,21 @@ class BatchedEngine:
                     pfc = (network.pfc_pause_trace(net, occ32, pfc_gen)
                            if d == "roce"
                            else np.zeros(occ32.shape, np.float32))
+                    parts = rec.new_parts() if rec is not None else None
                     res = designs.transfer(d, ph_pkts[k], occ32, eff_rate,
                                            drop_p, pfc, qd, rel, net,
-                                           transfer_gens[d])
+                                           transfer_gens[d], parts=parts)
                     if hier:
-                        topology.add_dci_latency(p.topo, hgs[k], res.time_us)
-                    faults.apply_to_result(d, res, blocked, dead, rel)
+                        topology.add_dci_latency(p.topo, hgs[k], res.time_us,
+                                                 parts=parts)
+                    faults.apply_to_result(d, res, blocked, dead, rel,
+                                           parts=parts)
                     self._phase_reduce_into(
                         out[d], t0 + rows, ph.src, hgs[k].tier_cols, res,
                         pod_cols=ph_pod_cols[k] if hier else None)
+                    if rec is not None:
+                        rec.record_phase(d, t0 + rows, ph, hgs[k],
+                                         ph_fan[k], res, parts)
         if fault_flows is not None:
             for tr in out.values():
                 tr.fault_flows = fault_flows
@@ -862,9 +892,14 @@ class BatchedEngine:
             gf = list(group_fracs)
             tf = gf.pop(0) if t_deliv is not None else None
             pf = gf.pop(0) if p_deliv is not None else None
-            return RoundStats(times_us=times, recv_frac=fracs,
-                              design=design, tier_recv_frac=tf,
-                              pod_recv_frac=pf, **tier_kw)
+            st = RoundStats(times_us=times, recv_frac=fracs,
+                            design=design, tier_recv_frac=tf,
+                            pod_recv_frac=pf, **tier_kw)
+            if self.recorder is not None:
+                # window-cut attribution: the gap between the trace's
+                # post-fault delivery and what survived the window
+                self.recorder.record_assemble(trace, st)
+            return st
 
         if trace.design != "celeris":
             return _pack(nat.sum(axis=1), deliv.sum(axis=1) / tot_sum,
@@ -1110,6 +1145,9 @@ class BatchedEngine:
             legacy_streams = False
         if self.plan_override is not None:
             # arbitrary flow plans exist only in shared-fabric mode
+            legacy_streams = False
+        if self.recorder is not None:
+            # telemetry hooks ride the shared-fabric per-phase pass
             legacy_streams = False
         tr = self.traces([design], n_rounds, seed,
                          legacy_streams=legacy_streams, per_node_for=keep)

@@ -250,18 +250,29 @@ class FaultModel:
         return blocked, dead
 
 
-def apply_to_result(design: str, res, blocked, dead, rel) -> None:
+def apply_to_result(design: str, res, blocked, dead, rel,
+                    parts: dict | None = None) -> None:
     """Overlay one phase's fault masks onto a ``TransferResult``
     in place (mutates ``res`` before the engine's reduction, so tier /
     pod / coupling accounting all inherit the fault for free).
 
     See the module docstring for the per-design semantics.  ``blocked``
     / ``dead`` may be None (nothing of that class in this block).
+
+    ``parts`` is the telemetry scratchpad: when passed, the fault-added
+    completion time (``"fault"``) and fault-swallowed packets
+    (``"fault_lost"``) are recorded as the exact deltas this overlay
+    applies — pure reads of the pre-mutation state, never a changed
+    draw or value.
     """
     if blocked is None and dead is None:
         return
     detect = {"roce": rel.rto_us, "irn": rel.rto_low_us,
               "srnic": rel.rto_low_us + rel.host_slowpath_us}.get(design)
+    if parts is not None:
+        shape = res.time_us.shape
+        parts["fault"] = f_add = np.zeros(shape)
+        parts["fault_lost"] = f_lost = np.zeros(shape)
     if dead is not None or design == "celeris":
         # reliable designs return broadcast (read-only) delivered views;
         # materialize before punching fault holes into them
@@ -269,13 +280,25 @@ def apply_to_result(design: str, res, blocked, dead, rel) -> None:
             res.delivered_pkts = np.array(res.delivered_pkts)
     if blocked is not None:
         if design == "celeris":
+            if parts is not None:
+                f_lost[blocked] = res.delivered_pkts[blocked]
             res.delivered_pkts[blocked] = 0.0
         else:
             # timeout-detect the silent outage, then resend the chunk
             t = res.time_us
+            if parts is not None:
+                f_add[blocked] = (np.asarray(t[blocked], np.float64)
+                                  + detect)
             t[blocked] = 2.0 * t[blocked] + t.dtype.type(detect)
     if dead is not None:
+        if parts is not None:
+            # += not =: a flow both blocked and dead already had its
+            # packets attributed by the blocked branch (delivered is 0
+            # by now) — overwriting would silently drop that loss
+            f_lost[dead] += res.delivered_pkts[dead]
         res.delivered_pkts[dead] = 0.0
         if design != "celeris":
             res.time_us[dead] += res.time_us.dtype.type(
                 detect * (1 + rel.max_retries))
+            if parts is not None:
+                f_add[dead] += detect * (1 + rel.max_retries)

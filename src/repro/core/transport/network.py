@@ -141,6 +141,22 @@ def drop_prob(p: NetworkParams, occ: np.ndarray) -> np.ndarray:
     return p.loss_max_prob * x ** 2
 
 
+def congestion_counters(p: NetworkParams, occ: np.ndarray,
+                        drop_p: np.ndarray | None = None) -> dict:
+    """Per-step fabric congestion summary for the telemetry counter
+    tracks (``telemetry.TraceRecorder.record_fabric``): mean / max path
+    occupancy, the fraction of flows past the ECN knee, and (when the
+    drop curve is at hand) mean drop probability.  Pure reads over the
+    per-phase ``(step, flow)`` blocks — reductions only, no new draws.
+    """
+    out = {"occ_mean": occ.mean(axis=-1).astype(np.float64),
+           "occ_max": occ.max(axis=-1).astype(np.float64),
+           "ecn_frac": (occ > p.ecn_threshold).mean(axis=-1)}
+    if drop_p is not None:
+        out["drop_p_mean"] = drop_p.mean(axis=-1).astype(np.float64)
+    return out
+
+
 # ----------------------------------------------------------------------
 # Vectorized traces (the batched engine's fabric front-end)
 # ----------------------------------------------------------------------

@@ -151,6 +151,12 @@ class FlowPlan:
     def single_phase(self) -> bool:
         return len(self.phases) == 1
 
+    @property
+    def phase_names(self) -> tuple:
+        """Phase names in execution order — the telemetry layer's track
+        labels (``telemetry.TraceRecorder`` / ``trace_export``)."""
+        return tuple(ph.name for ph in self.phases)
+
     def max_fan_in(self) -> int:
         """Largest per-receiver concurrent-sender count over all phases
         (1 for every collective schedule; > 1 marks an incast plan)."""

@@ -228,11 +228,22 @@ def dci_cnp_draws(hg: HierGeometry, ecn_p: np.ndarray, cnp: np.ndarray,
 
 
 def add_dci_latency(topo: TopologyParams, hg: HierGeometry,
-                    time_us: np.ndarray) -> None:
-    """Extra DCI propagation (one-way) on cross-pod completion times."""
+                    time_us: np.ndarray, parts: dict | None = None) -> None:
+    """Extra DCI propagation (one-way) on cross-pod completion times.
+
+    ``parts`` is the telemetry scratchpad: the DCI propagation is RTT
+    (speed of light between pods), so it lands in the "rtt" component —
+    which must be promoted from the scalar ``designs.transfer`` wrote
+    to a per-flow array before the cross columns diverge.
+    """
     if hg.cross.size:
         time_us[..., hg.cross] += np.asarray(topo.dci_rtt_us / 2.0,
                                              dtype=time_us.dtype)
+        if parts is not None:
+            rtt = np.full(time_us.shape,
+                          float(parts.get("rtt", 0.0)))
+            rtt[..., hg.cross] += topo.dci_rtt_us / 2.0
+            parts["rtt"] = rtt
 
 
 # ----------------------------------------------------------------------
@@ -268,7 +279,8 @@ def hier_params(n_pods: int, *, base: SimParams | None = None,
 
 
 def hier_protocol(params: SimParams, n_rounds: int = 200, seed: int = 0, *,
-                  timeout_scale: float = 1.0, window: str = "round"):
+                  timeout_scale: float = 1.0, window: str = "round",
+                  recorder=None):
     """Fig.-4 protocol on the hierarchical fabric.
 
     Same window rule as the flat paper protocol — the RoCE baseline on
@@ -278,11 +290,13 @@ def hier_protocol(params: SimParams, n_rounds: int = 200, seed: int = 0, *,
     selects the Celeris budget policy ("round" | "phase", see
     ``params.WindowPolicy``) — "phase" splits the same budget across
     the collective schedule's phase blocks by their ``budget_frac``.
-    Returns ``{design: RoundStats}`` for roce + celeris.
+    Returns ``{design: RoundStats}`` for roce + celeris.  Pass a
+    ``telemetry.TraceRecorder`` as ``recorder`` to capture the tail /
+    loss attribution of both designs (a pure overlay; stats unchanged).
     """
     from repro.core.transport.engine import BatchedEngine
 
-    eng = BatchedEngine(params)
+    eng = BatchedEngine(params, recorder=recorder)
     tr = eng.traces(["roce", "celeris"], n_rounds, seed,
                     legacy_streams=False)
     base = eng.assemble(tr["roce"], seed)

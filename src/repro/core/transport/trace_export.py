@@ -1,0 +1,190 @@
+"""Chrome/Perfetto ``trace_event`` export for recorded engine traces.
+
+Turns a :class:`~repro.core.transport.telemetry.TraceRecorder` into the
+JSON Trace Event Format that https://ui.perfetto.dev (and Chrome's
+``about:tracing``) render natively:
+
+- one **process** per NIC design (``pid`` = design index, named via
+  ``M``/``process_name`` metadata),
+- one **thread** per schedule phase (``tid`` = phase index + 1), whose
+  ``X`` complete-events are the per-step critical-path slices — ``ts``
+  is the cumulative natural time, ``dur`` the step's natural duration,
+  and ``args`` the critical flow's component decomposition (telemetry
+  .COMPONENTS), its sender node and tier — so a p99 round's timeline
+  shows *where* the microseconds went,
+- a **round marker thread** (``tid`` 0) with one slice per round
+  carrying the per-cause loss attribution and, for Celeris, the window
+  cut,
+- **counter tracks** (``C``) per design for delivered fraction, plus
+  design-independent fabric occupancy counters when the recorder
+  captured them.
+
+The exporter is read-only over the recorder and pure stdlib; the
+schema validator (:func:`validate_trace`) is the round-trip gate the
+tests and the ``--trace`` CLI flag share.  See docs/OBSERVABILITY.md.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.transport import telemetry, topology
+
+_EVENT_TYPES = ("X", "C", "M", "i")
+_ROUND_TID = 0
+
+
+def _slices(rec, pid: int, max_rounds: int | None) -> List[dict]:
+    R = rec.n_rounds if max_rounds is None else min(rec.n_rounds, max_rounds)
+    steps = rec.steps
+    cc = rec.comp_crit
+    step_dur = cc.reshape(rec.n_rounds, steps, -1).sum(axis=2)
+    nat = (rec.natural_us if rec.natural_us is not None
+           else step_dur.sum(axis=1))
+    events: List[dict] = []
+    ts = 0.0
+    for r in range(R):
+        t0 = ts
+        events.append({
+            "name": f"round {r}", "ph": "X", "pid": pid, "tid": _ROUND_TID,
+            "ts": round(t0, 3), "dur": round(float(nat[r]), 3),
+            "cat": "round", "args": _round_args(rec, r)})
+        for s in range(steps):
+            i = r * steps + s
+            k = int(rec.phase_of_step[s])
+            comp = {name: round(float(cc[i, ci]), 3)
+                    for ci, name in enumerate(telemetry.COMPONENTS)
+                    if cc[i, ci] > 0}
+            tier = int(rec.crit_tier[i])
+            events.append({
+                "name": rec.phase_names[k], "ph": "X", "pid": pid,
+                "tid": k + 1, "ts": round(ts, 3),
+                "dur": round(float(step_dur[r, s]), 3), "cat": "step",
+                "args": {"components_us": comp,
+                         "critical_src": int(rec.crit_src[i]),
+                         "critical_tier": (topology.TIERS[tier]
+                                           if tier >= 0 else "?")}})
+            ts += float(step_dur[r, s])
+        ts = t0 + float(nat[r])
+        if rec.stats is not None:
+            events.append({
+                "name": "delivered_frac", "ph": "C", "pid": pid,
+                "tid": _ROUND_TID, "ts": round(t0, 3),
+                "args": {"frac": round(
+                    float(np.asarray(rec.stats.recv_frac)[r]), 6)}})
+    return events
+
+
+def _round_args(rec, r: int) -> dict:
+    args: dict = {}
+    lost = rec.loss_by_cause()[r].sum(axis=0)
+    offered = max(float(rec.offered_round()[r].sum()), 1.0)
+    args["loss_by_cause"] = {
+        c: round(float(lost[i]) / offered, 6)
+        for i, c in enumerate(telemetry.CAUSES) if lost[i] > 0}
+    if rec.elapsed_us is not None:
+        args["elapsed_us"] = round(float(rec.elapsed_us[r]), 3)
+    if rec.window_cut_pkts is not None:
+        cut = float(rec.window_cut_pkts[r].sum())
+        if cut > 0:
+            args["window_cut_pkts"] = round(cut, 3)
+    return args
+
+
+def to_trace_events(recorder: telemetry.TraceRecorder, *,
+                    max_rounds: int | None = None,
+                    meta: dict | None = None) -> dict:
+    """Build the trace_event JSON object for every recorded design.
+
+    ``max_rounds`` caps the exported rounds per design (None = all);
+    the cap is recorded in ``otherData`` so a truncated export never
+    masquerades as full coverage.
+    """
+    if not recorder.records:
+        raise ValueError("recorder holds no records: run "
+                         "BatchedEngine(params, recorder=rec).traces(...) "
+                         "first")
+    events: List[dict] = []
+    designs = sorted(recorder.records)
+    for pid, d in enumerate(designs):
+        rec = recorder.records[d]
+        events.append({"name": "process_name", "ph": "M", "pid": pid,
+                       "tid": 0, "args": {"name": f"design:{d}"}})
+        events.append({"name": "thread_name", "ph": "M", "pid": pid,
+                       "tid": _ROUND_TID, "args": {"name": "rounds"}})
+        for k, pn in enumerate(rec.phase_names):
+            events.append({"name": "thread_name", "ph": "M", "pid": pid,
+                           "tid": k + 1, "args": {"name": f"phase:{pn}"}})
+        events.extend(_slices(rec, pid, max_rounds))
+    other = {"generator": "repro.core.transport.trace_export",
+             "components": list(telemetry.COMPONENTS),
+             "causes": list(telemetry.CAUSES),
+             "designs": designs,
+             "max_rounds": max_rounds}
+    if meta:
+        other.update(meta)
+    return {"traceEvents": events, "displayTimeUnit": "ms",
+            "otherData": other}
+
+
+def write_trace(recorder: telemetry.TraceRecorder, path: str, *,
+                max_rounds: int | None = None,
+                meta: dict | None = None) -> dict:
+    """Export, validate, and write the trace JSON; returns the object."""
+    obj = to_trace_events(recorder, max_rounds=max_rounds, meta=meta)
+    validate_trace(obj)
+    with open(path, "w") as f:
+        json.dump(obj, f)
+    return obj
+
+
+def validate_trace(obj) -> Dict[str, int]:
+    """Schema validator for the export (and anything claiming to be a
+    trace_event JSON we produced).  Raises ``ValueError`` with the
+    first violation; returns per-event-type counts on success.  Checks:
+    top-level shape, per-event required fields by phase type, numeric
+    non-negative ``ts``/``dur``, step slices carrying a component
+    decomposition limited to the published schema."""
+    if not isinstance(obj, dict):
+        raise ValueError("trace must be a JSON object")
+    for key in ("traceEvents", "otherData"):
+        if key not in obj:
+            raise ValueError(f"trace missing top-level {key!r}")
+    events = obj["traceEvents"]
+    if not isinstance(events, list) or not events:
+        raise ValueError("traceEvents must be a non-empty list")
+    comps = set(obj["otherData"].get("components", telemetry.COMPONENTS))
+    counts: Dict[str, int] = {}
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            raise ValueError(f"event {i}: not an object")
+        ph = ev.get("ph")
+        if ph not in _EVENT_TYPES:
+            raise ValueError(f"event {i}: unknown ph {ph!r}")
+        counts[ph] = counts.get(ph, 0) + 1
+        for field in ("name", "pid", "tid"):
+            if field not in ev:
+                raise ValueError(f"event {i} ({ph}): missing {field!r}")
+        if ph in ("X", "C", "i"):
+            ts = ev.get("ts")
+            if not isinstance(ts, (int, float)) or ts < 0:
+                raise ValueError(f"event {i} ({ph}): bad ts {ts!r}")
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                raise ValueError(f"event {i} (X): bad dur {dur!r}")
+            args = ev.get("args", {})
+            bad = set(args.get("components_us", {})) - comps
+            if bad:
+                raise ValueError(
+                    f"event {i} (X): unknown components {sorted(bad)}")
+        if ph == "C" and not isinstance(ev.get("args"), dict):
+            raise ValueError(f"event {i} (C): counter needs args object")
+    if counts.get("M", 0) == 0:
+        raise ValueError("no metadata (M) events: process/thread names "
+                         "are required for a readable Perfetto view")
+    if counts.get("X", 0) == 0:
+        raise ValueError("no slice (X) events")
+    return counts

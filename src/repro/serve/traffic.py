@@ -175,11 +175,20 @@ def request_trace(tp: ServeTrafficParams, horizon_us: float,
 
 @dataclasses.dataclass(frozen=True)
 class ServingResult:
-    """Per-request outcomes of one design's rounds serving one trace."""
+    """Per-request outcomes of one design's rounds serving one trace.
+
+    ``kv_loss_by_cause`` (present when ``simulate_serving`` was given
+    the engine's per-cause loss rates — ``telemetry.DesignRecord
+    .loss_rates()``) splits each request's missing KV fraction by
+    originating cause (``telemetry.CAUSES`` order: wire_drop, fault,
+    window_cut), shipped-block-weighted exactly like ``kv_frac`` — the
+    serve side of the end-to-end drop-provenance chain.
+    """
     latency_us: np.ndarray      # (n_req,) time-to-first-decode-token
     completed: np.ndarray       # (n_req,) bool — KV fully shipped in horizon
     kv_frac: np.ndarray         # (n_req,) delivered KV fraction (<= 1)
     blocks_shipped: int         # total blocks moved (conservation checks)
+    kv_loss_by_cause: np.ndarray | None = None   # (n_req, n_causes)
 
     @property
     def p99_latency_us(self) -> float:
@@ -194,9 +203,22 @@ class ServingResult:
         done = self.kv_frac[self.completed]
         return float(done.mean()) if done.size else 1.0
 
+    def loss_attribution(self) -> dict:
+        """Mean lost-KV fraction by cause over completed requests
+        (empty dict when causes were not supplied)."""
+        if self.kv_loss_by_cause is None:
+            return {}
+        from repro.core.transport import telemetry
+        rows = self.kv_loss_by_cause[self.completed]
+        if not rows.size:
+            return {c: 0.0 for c in telemetry.CAUSES}
+        return {c: float(rows[:, i].mean())
+                for i, c in enumerate(telemetry.CAUSES)}
+
 
 def simulate_serving(tp: ServeTrafficParams, times_us: np.ndarray,
-                     recv_frac: np.ndarray, trace: RequestTrace
+                     recv_frac: np.ndarray, trace: RequestTrace,
+                     loss_rates: np.ndarray | None = None
                      ) -> ServingResult:
     """FIFO KV shipping over one design's engine rounds.
 
@@ -212,6 +234,14 @@ def simulate_serving(tp: ServeTrafficParams, times_us: np.ndarray,
     *censored*: ``completed=False`` and their latency is the (lower
     bound) horizon remainder — report completion_frac next to any
     latency percentile at loads near 1.
+
+    ``loss_rates`` (optional, ``(R, n_causes)`` — per-round lost
+    payload fraction by cause, ``telemetry.DesignRecord.loss_rates()``
+    from the engine run that produced ``times_us``/``recv_frac``)
+    additionally attributes every request's missing KV to its
+    originating cause with the same shipped-block weighting, so a
+    degraded cache can be traced back to a DCI fault stall or a window
+    cut.  Rounds beyond the rates' length wrap, like DropSchedule.
     """
     T_end = np.cumsum(times_us)
     R = times_us.size
@@ -219,6 +249,10 @@ def simulate_serving(tp: ServeTrafficParams, times_us: np.ndarray,
     order = np.argsort(trace.ready_us, kind="stable")
     latency = np.zeros(n)
     kv_got = np.zeros(n)
+    lr = None
+    if loss_rates is not None:
+        lr = np.asarray(loss_rates, np.float64)
+        kv_lost = np.zeros((n, lr.shape[1]))
     done = np.zeros(n, dtype=bool)
     cap = tp.capacity_blocks_per_round
     shipped_total = 0
@@ -238,6 +272,8 @@ def simulate_serving(tp: ServeTrafficParams, times_us: np.ndarray,
                 budget -= ship
                 shipped_total += ship
                 kv_got[j] += ship * recv_frac[r]
+                if lr is not None:
+                    kv_lost[j] += ship * lr[r % lr.shape[0]]
                 if remaining[j] == 0:
                     done[j] = True
                     latency[j] = T_end[r] - trace.arrival_us[j]
@@ -253,9 +289,14 @@ def simulate_serving(tp: ServeTrafficParams, times_us: np.ndarray,
         horizon - trace.arrival_us[censored], 0.0)
     kv_frac = np.where(trace.kv_blocks > 0,
                        kv_got / np.maximum(trace.kv_blocks, 1), 1.0)
+    by_cause = None
+    if lr is not None:
+        by_cause = np.clip(
+            kv_lost / np.maximum(trace.kv_blocks, 1)[:, None], 0.0, 1.0)
     return ServingResult(latency_us=latency, completed=done,
                          kv_frac=np.clip(kv_frac, 0.0, 1.0),
-                         blocks_shipped=shipped_total)
+                         blocks_shipped=shipped_total,
+                         kv_loss_by_cause=by_cause)
 
 
 def nominal_round_us(tp: ServeTrafficParams, net: NetworkParams) -> float:

@@ -1,0 +1,345 @@
+"""Flight-recorder telemetry (ISSUE 8 acceptance tests).
+
+- The recorder is a pure overlay: with it attached, the seeded engine
+  stats stay bit-exact against the committed pre-telemetry seed stats
+  (flat and 2-pod pinned configs) — recording only reads.
+- The attribution conserves: per-(phase, tier, cause) component times
+  and lost packets sum exactly to the pinned ``RoundStats`` totals
+  (``audit_round``), clean and under injected NIC faults — and the
+  audit *catches* tampered records (the PR-7 ``.ravel→.flat``
+  silent-undercount bug class now fails loudly).
+- The Chrome/Perfetto export round-trips through its own schema
+  validator; corrupted events are rejected.
+- Drop provenance survives the stack boundary: ``schedule_from_engine
+  (record=True)`` → ``DropSchedule.provenance`` explains exactly the
+  clipped rates the trainer masks with, through to a real 8-device
+  hierarchical train step.
+- The serve path attributes per-request KV loss by cause without
+  perturbing the FIFO simulation.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.transport import (BatchedEngine, ConservationError,
+                                  FaultParams, NetworkParams, SimParams,
+                                  TraceRecorder, coupling, telemetry,
+                                  topology, trace_export)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SMALL = SimParams(net=NetworkParams(n_nodes=32, burst_on_prob=0.0008))
+
+
+def _pinned():
+    path = os.path.join(os.path.dirname(__file__), "data",
+                        "ring_schedule_seed_stats.json")
+    return json.load(open(path))
+
+
+def _recorded_flat(params=SMALL, n_rounds=40, seed=11, scale=0.8):
+    rec = TraceRecorder()
+    eng = BatchedEngine(params, recorder=rec)
+    tr = eng.traces(["roce", "celeris"], n_rounds, seed,
+                    legacy_streams=False)
+    base = eng.assemble(tr["roce"], seed)
+    to = float(np.percentile(base.times_us, 50)
+               + base.times_us.std()) * scale
+    cel = eng.assemble(tr["celeris"], seed, celeris_timeout_us=to,
+                       adaptive=False, window="round")
+    return base, cel, to, rec
+
+
+# ------------------------------------------------ pure-overlay contract
+
+def test_recorder_on_flat_bitexact_and_conserves():
+    """Recorder attached: stats bit-identical to the committed seed
+    stats, and the recorded attribution conserves to them."""
+    ref = _pinned()["flat"]
+    base, cel, to, rec = _recorded_flat()
+    np.testing.assert_array_equal(base.times_us,
+                                  np.array(ref["roce_times_us"]))
+    assert to == ref["celeris_timeout_us"]
+    np.testing.assert_array_equal(cel.times_us,
+                                  np.array(ref["celeris_times_us"]))
+    np.testing.assert_array_equal(cel.recv_frac,
+                                  np.array(ref["celeris_recv_frac"]))
+    for st, d in ((base, "roce"), (cel, "celeris")):
+        out = telemetry.audit_round(st, rec.record(d))
+        assert out["time_rel_err"] < 2e-5
+        assert out["pkt_rel_err"] < 1e-9
+        assert out["offered_vs_plan_rel_err"] < 1e-9
+    # the reliable design loses nothing; celeris's loss is attributed —
+    # the per-cause split sums back to the stats' scalar loss exactly
+    r = rec.record("celeris")
+    assert rec.record("roce").loss_rates().sum() == 0.0
+    np.testing.assert_allclose(r.loss_rates().sum(axis=1),
+                               1.0 - cel.recv_frac, atol=1e-9)
+    cut = r.loss_rates()[:, telemetry.CAUSES.index("window_cut")]
+    assert cut.sum() > 0.0
+
+
+def test_recorder_on_two_pods_bitexact_and_conserves():
+    ref = _pinned()["pods2"]
+    rec = TraceRecorder()
+    hp = topology.hier_params(2, base=SMALL, dci_oversubscription=8.0)
+    stats = topology.hier_protocol(hp, n_rounds=40, seed=11,
+                                   timeout_scale=0.8, recorder=rec)
+    np.testing.assert_array_equal(stats["celeris"].times_us,
+                                  np.array(ref["celeris_times_us"]))
+    np.testing.assert_array_equal(stats["celeris"].tier_recv_frac,
+                                  np.array(ref["celeris_tier_recv_frac"]))
+    out = telemetry.audit_round(stats["celeris"], rec.record("celeris"))
+    assert out["pkt_rel_err"] < 1e-9
+    assert "pod_recomb_rel_err" in out
+
+
+def test_faulted_runs_conserve_and_attribute():
+    """NIC stalls show up as fault *time* on the reliable design and
+    fault *loss* on Celeris — and everything still conserves."""
+    p = SimParams(net=NetworkParams(n_nodes=32, burst_on_prob=0.0008),
+                  fault=FaultParams(stall_rate=3e-4, stall_steps=40))
+    base, cel, _, rec = _recorded_flat(params=p, seed=7)
+    for st, d in ((base, "roce"), (cel, "celeris")):
+        telemetry.audit_round(st, rec.record(d))
+    fcomp = rec.record("roce").round_components()[
+        :, telemetry.COMPONENTS.index("fault")]
+    assert fcomp.sum() > 0.0
+    floss = rec.record("celeris").loss_rates()[
+        :, telemetry.CAUSES.index("fault")]
+    assert floss.sum() > 0.0
+
+
+def test_audit_catches_tampered_record():
+    """A silently dropped in-place update (the `.ravel()[idx] +=` bug
+    class) undercounts a component or a loss column — both must raise."""
+    base, cel, _, rec = _recorded_flat()
+    r = rec.record("celeris")
+    keep = r.comp_crit.copy()
+    r.comp_crit[:, 0] *= 0.5                  # lose half the serialize time
+    with pytest.raises(ConservationError):
+        telemetry.audit_round(cel, r)
+    r.comp_crit[:] = keep
+    r.lost_pkts[:, :, 0] += 7.0               # phantom wire loss
+    with pytest.raises(ConservationError):
+        telemetry.audit_round(cel, r)
+
+
+def test_recorder_rejects_legacy_streams():
+    eng = BatchedEngine(SMALL, recorder=TraceRecorder())
+    with pytest.raises(ValueError, match="legacy_streams"):
+        eng.traces(["roce"], 10, 0, legacy_streams=True)
+    # run() silently routes to shared mode instead of raising
+    st = eng.run("roce", 5, seed=3)
+    assert st.times_us.shape == (5,)
+
+
+def test_unassembled_record_fails_audit():
+    rec = TraceRecorder()
+    eng = BatchedEngine(SMALL, recorder=rec)
+    tr = eng.traces(["roce"], 5, 0, legacy_streams=False)
+    st = BatchedEngine(SMALL).run("roce", 5, seed=0)
+    with pytest.raises(ConservationError, match="not assembled"):
+        telemetry.audit_round(st, rec.record("roce"))
+
+
+# ------------------------------------------------------- export schema
+
+def test_trace_export_roundtrips(tmp_path):
+    _, _, _, rec = _recorded_flat(n_rounds=10)
+    path = tmp_path / "trace.json"
+    obj = trace_export.write_trace(rec, str(path), meta={"test": "yes"})
+    loaded = json.load(open(path))
+    counts = trace_export.validate_trace(loaded)
+    assert counts["X"] > 0 and counts["M"] > 0
+    # one rounds track + one per phase, per design
+    pids = {e["pid"] for e in loaded["traceEvents"] if e["ph"] == "X"}
+    assert len(pids) == 2
+    # every slice's component args are schema-listed components
+    for e in loaded["traceEvents"]:
+        if e["ph"] == "X" and "components_us" in e.get("args", {}):
+            assert set(e["args"]["components_us"]) <= set(
+                telemetry.COMPONENTS)
+
+
+def test_trace_validator_rejects_corruption(tmp_path):
+    _, _, _, rec = _recorded_flat(n_rounds=5)
+    obj = trace_export.to_trace_events(rec)
+    ok = json.loads(json.dumps(obj))
+    trace_export.validate_trace(ok)
+
+    bad = json.loads(json.dumps(obj))
+    del bad["traceEvents"][0]["name"]
+    with pytest.raises(ValueError):
+        trace_export.validate_trace(bad)
+
+    bad = json.loads(json.dumps(obj))
+    for e in bad["traceEvents"]:
+        if e["ph"] == "X":
+            e["dur"] = -1.0
+            break
+    with pytest.raises(ValueError):
+        trace_export.validate_trace(bad)
+
+    bad = json.loads(json.dumps(obj))
+    for e in bad["traceEvents"]:
+        if e["ph"] == "X" and "components_us" in e.get("args", {}):
+            e["args"]["components_us"]["not_a_component"] = 1.0
+            break
+    with pytest.raises(ValueError):
+        trace_export.validate_trace(bad)
+
+    with pytest.raises(ValueError, match="no records"):
+        trace_export.to_trace_events(TraceRecorder())
+
+
+# --------------------------------------------------- drop provenance
+
+def test_flat_schedule_provenance_recorded_vs_heuristic():
+    rec_sched = coupling.schedule_from_engine(
+        40, 11, params=SMALL, timeout_scale=0.8, record=True)
+    heu_sched = coupling.schedule_from_engine(
+        40, 11, params=SMALL, timeout_scale=0.8, record=False)
+    # provenance never changes the schedule itself
+    np.testing.assert_array_equal(rec_sched.rates, heu_sched.rates)
+    p = rec_sched.provenance
+    assert p.source == "recorded" and heu_sched.provenance.source == \
+        "heuristic"
+    # the unclipped per-cause split explains exactly the clipped rates
+    np.testing.assert_allclose(
+        np.clip(p.total(), 0.0, coupling.MAX_DROP), rec_sched.rates,
+        atol=1e-9)
+    assert p.dominant_cause() == "window_cut"
+    assert p.phases and p.phase_rates is not None
+    assert "window_cut" in p.describe()
+
+
+def test_split_schedule_provenance_per_axis():
+    sp = coupling.split_schedule_from_engine(
+        30, seed=4, params=SMALL, n_pods=2, dci_oversubscription=8.0,
+        timeout_scale=0.8, record=True)
+    for axis, sched in (("intra", sp.intra), ("cross", sp.cross)):
+        p = sched.provenance
+        assert p is not None and p.axis == axis and p.source == "recorded"
+        np.testing.assert_allclose(
+            np.clip(p.total(), 0.0, coupling.MAX_DROP), sched.rates,
+            atol=1e-9)
+    assert sp.cross.provenance.tiers == ("dci",)
+
+
+def _run(code: str, devices: int = 8, timeout: int = 420):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    return r.stdout
+
+
+def test_provenance_reaches_train_step_masks_8dev():
+    """End-to-end tag survival: a recorded axis-split schedule drives a
+    real 8-device hierarchical train step, and the realized cross-pod
+    received fraction matches the very rate the provenance explains."""
+    _run("""
+        import numpy as np
+        import jax, jax.numpy as jnp
+        import repro.configs as C
+        from repro import sharding as shd
+        from repro.core.transport import NetworkParams, SimParams, coupling
+        from repro.data.pipeline import DataConfig, make_source
+        from repro.optim.adamw import OptConfig
+        from repro.train import train_step as ts, sharding_rules as rules
+
+        small = SimParams(net=NetworkParams(n_nodes=32,
+                                            burst_on_prob=0.0008))
+        sp = coupling.split_schedule_from_engine(
+            30, seed=4, params=small, n_pods=2, dci_oversubscription=8.0,
+            timeout_scale=0.5, record=True)
+        prov = sp.cross.provenance
+        assert prov is not None and prov.source == 'recorded'
+        # pick the worst cross-pod step: the mask the trainer will draw
+        i = int(np.argmax(sp.cross.rates))
+        rate = sp.cross.rate(i)
+        assert rate > 0.05, (rate, 'cell too mild to assert anything')
+        np.testing.assert_allclose(
+            np.clip(prov.total(), 0.0, coupling.MAX_DROP)[i], rate,
+            atol=1e-9)
+        cause = prov.causes[int(np.argmax(prov.rates[i]))]
+        assert cause in ('window_cut', 'wire_drop', 'fault')
+
+        mesh = shd.make_mesh((2, 4), ('pod', 'data'))
+        shd.set_global_mesh(mesh)
+        cfg = C.get_smoke('qwen2-0.5b')
+        src = make_source(DataConfig(vocab_size=cfg.vocab_size,
+                                     seq_len=32, global_batch=8, seed=1))
+        host = src.global_batch(0, 8)
+        spb = rules.batch_specs(mesh, host)
+        batch = {k: jax.device_put(
+                     v, jax.sharding.NamedSharding(mesh, spb[k]))
+                 for k, v in host.items()}
+        fn = ts.make_train_step(
+            cfg, mesh, OptConfig(lr=1e-3),
+            ts.CelerisConfig(mode='hierarchical', min_coded_size=1024))
+        st = ts.init_state(jax.random.PRNGKey(0), cfg)
+        st = jax.device_put(st, ts.state_shardings(st, mesh))
+        st, m = fn(st, batch, jax.random.PRNGKey(1),
+                   jnp.asarray([sp.intra.rate(i), rate], jnp.float32))
+        got = float(m['recv_frac'])
+        assert abs(got - (1.0 - rate)) < 0.1, (got, rate)
+        assert np.isfinite(float(m['loss']))
+        print('OK', rate, cause, got)
+    """)
+
+
+# -------------------------------------------------------- serve path
+
+def test_serve_loss_attribution_is_pure_overlay():
+    from repro.serve.traffic import (ServeTrafficParams, request_trace,
+                                     simulate_serving)
+    base, cel, _, rec = _recorded_flat()
+    lr = rec.record("celeris").loss_rates()
+    tp = ServeTrafficParams()
+    ref = float(np.median(cel.times_us))
+    trace = request_trace(tp, float(cel.times_us.sum()), ref, seed=3)
+    res0 = simulate_serving(tp, cel.times_us, cel.recv_frac, trace)
+    res = simulate_serving(tp, cel.times_us, cel.recv_frac, trace,
+                           loss_rates=lr)
+    np.testing.assert_array_equal(res.latency_us, res0.latency_us)
+    np.testing.assert_array_equal(res.kv_frac, res0.kv_frac)
+    np.testing.assert_array_equal(res.completed, res0.completed)
+    assert res0.kv_loss_by_cause is None
+    assert res.kv_loss_by_cause is not None
+    # per-request: attributed loss sums to the KV hole, by construction
+    done = res.completed
+    np.testing.assert_allclose(
+        res.kv_loss_by_cause[done].sum(axis=1),
+        1.0 - res.kv_frac[done], atol=1e-9)
+    attr = res.loss_attribution()
+    assert set(attr) == set(telemetry.CAUSES)
+    assert attr["window_cut"] >= 0.0
+
+
+# ------------------------------------------------- fig9 determinism
+
+def test_fig9_smoke_deterministic():
+    if REPO not in sys.path:
+        sys.path.insert(0, REPO)
+    import contextlib
+    import io
+    from benchmarks import fig9_tail_attribution as f9
+    with contextlib.redirect_stdout(io.StringIO()):
+        a = f9.run(smoke=True, prefix="smoke_fig9")
+        b = f9.run(smoke=True, prefix="smoke_fig9")
+    assert a == b
+    keys = [k for k, _, _ in a]
+    assert "smoke_fig9_audit_pass" in keys
+    claims = {k: (v, r) for k, v, r in a if r is not None}
+    for k, (v, r) in claims.items():
+        assert v == r, (k, v, r)
