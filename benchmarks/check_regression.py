@@ -23,6 +23,15 @@ fails the build, while full-tier keys don't false-positive.
 Keys present in the new run but absent from the baseline are reported
 as a NEW-keys drift list (informational): that's the signal to commit
 a refreshed baseline so the new metrics become gated too.
+
+A few keys carry a **floor gate** instead of the symmetric rule
+(``_FLOOR_GATES``): ``smoke_engine_speedup`` must stay >= 1.0 — the
+jax engine backend never slower than the numpy reference.  The
+symmetric 25% rule would be wrong for it twice over: it is wall-clock
+derived (machine-dependent), and getting *faster* must never fail the
+build.  Floor keys are checked against their floor whenever the new
+run emits them (baseline value irrelevant) and still count as
+non-volatile for the disappeared-key rule.
 """
 import argparse
 import json
@@ -31,6 +40,9 @@ import sys
 
 _SKIP_SUFFIXES = ("_wall_s", "_us", "_speedup_x")
 _SKIP_PREFIXES = ("total_bench_wall_s",)
+
+# key -> minimum allowed value; exempt from the symmetric tolerance
+_FLOOR_GATES = {"smoke_engine_speedup": 1.0}
 
 _DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_sim.json")
@@ -46,7 +58,7 @@ def _tier(key: str) -> str:
 
 
 def compare(new: dict, base: dict, tol: float, require_all: bool = False):
-    """Returns (checked, failures, missing, fresh).
+    """Returns (checked, failures, missing, fresh, floors).
 
     ``missing`` lists baseline metrics the new run no longer emits — a
     silently-disappeared metric must fail the gate, not shrink it.  By
@@ -55,10 +67,12 @@ def compare(new: dict, base: dict, tol: float, require_all: bool = False):
     every non-volatile baseline key unconditionally.  ``fresh`` lists
     new-run metrics absent from the baseline (the drift report — new
     keys awaiting a baseline refresh; informational, never fails).
+    ``floors`` lists the ``_FLOOR_GATES`` checks as ``(key, floor,
+    value, ok)``; a failed floor is also appended to ``failures``.
     """
     checked, failures = [], []
     for key in sorted(set(new) & set(base)):
-        if volatile(key):
+        if volatile(key) or key in _FLOOR_GATES:
             continue
         try:
             b, n = float(base[key]), float(new[key])
@@ -68,6 +82,18 @@ def compare(new: dict, base: dict, tol: float, require_all: bool = False):
         checked.append((key, b, n, rel))
         if rel > tol:
             failures.append((key, b, n, rel))
+    floors = []
+    for key, floor in sorted(_FLOOR_GATES.items()):
+        if key not in new:
+            continue
+        try:
+            n = float(new[key])
+        except (TypeError, ValueError):
+            continue
+        ok = n >= floor
+        floors.append((key, floor, n, ok))
+        if not ok:
+            failures.append((key, floor, n, (floor - n) / floor))
     if require_all:
         missing = [k for k in sorted(base)
                    if not volatile(k) and k not in new]
@@ -76,8 +102,9 @@ def compare(new: dict, base: dict, tol: float, require_all: bool = False):
         missing = [k for k in sorted(base)
                    if not volatile(k) and _tier(k) in new_tiers
                    and k not in new]
-    fresh = [k for k in sorted(new) if not volatile(k) and k not in base]
-    return checked, failures, missing, fresh
+    fresh = [k for k in sorted(new) if not volatile(k)
+             and k not in base and k not in _FLOOR_GATES]
+    return checked, failures, missing, fresh, floors
 
 
 def main():
@@ -96,21 +123,25 @@ def main():
         base = json.load(f)
     new_path, base_path, tol = args.new_json, args.baseline_json, args.tol
 
-    checked, failures, missing, fresh = compare(new, base, tol,
-                                                args.require_all)
-    if not checked:
+    checked, failures, missing, fresh, floors = compare(new, base, tol,
+                                                        args.require_all)
+    if not checked and not floors:
         sys.exit(f"no comparable keys between {new_path} and {base_path} "
                  "— baseline missing the tier that just ran?")
     for key, b, n, rel in checked:
         mark = "FAIL" if rel > tol else "ok  "
         print(f"{mark} {key}: baseline={b} new={n} rel={rel*100:.1f}%")
+    for key, floor, n, ok in floors:
+        mark = "ok  " if ok else "FAIL"
+        print(f"{mark} {key}: floor={floor} new={n} (floor gate, "
+              "tolerance-exempt)")
     for key in missing:
         print(f"GONE {key}: in baseline but not emitted by this run")
     for key in fresh:
         print(f"NEW  {key}: emitted by this run but not in the baseline "
               "(commit a refreshed baseline to gate it)")
-    print(f"\n{len(checked)} metrics checked, {len(failures)} over the "
-          f"{tol*100:.0f}% threshold, {len(missing)} disappeared, "
+    print(f"\n{len(checked)} metrics checked (+{len(floors)} floor-"
+          f"gated), {len(failures)} failed, {len(missing)} disappeared, "
           f"{len(fresh)} new")
     if failures or missing:
         sys.exit(1)

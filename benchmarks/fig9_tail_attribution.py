@@ -179,10 +179,10 @@ def run(n_rounds=N_ROUNDS, seed=0, smoke=False, prefix="fig9",
 
     if write_trace:
         os.makedirs(os.path.dirname(TRACE_OUT), exist_ok=True)
-        obj = trace_export.write_trace(rec, TRACE_OUT,
-                                       meta={"figure": "fig9",
-                                             "cell": "fault"})
-        n_slices = sum(1 for e in obj["traceEvents"] if e["ph"] == "X")
+        counts = trace_export.write_trace(rec, TRACE_OUT,
+                                          meta={"figure": "fig9",
+                                                "cell": "fault"})
+        n_slices = counts.get("X", 0)
         print(f"  perfetto trace -> {TRACE_OUT} "
               f"({n_slices} slices, validated)")
 

@@ -53,4 +53,20 @@ def run():
     us_qp = _time(lambda a, b: ops.quantize_int8(a, b), x, noise)
     print(f"quantize pallas    (256,4096): {us_qp:10.1f} us")
     rows.append(("kernel_quant_pallas_us", round(us_qp, 1), None))
+
+    # fused rotate+quantize (one kernel, no HBM round trip between the
+    # stages — what coding.encode_quantized issues) vs the unfused pair
+    us_pair = _time(
+        lambda a, s, b: ops.quantize_int8(
+            ops.fwht(a, signs=s, scale=4096 ** -0.5), b),
+        x, signs, noise)
+    print(f"fwht+quant unfused (256,4096): {us_pair:10.1f} us")
+    rows.append(("kernel_fwht_quant_unfused_us", round(us_pair, 1), None))
+
+    us_fq = _time(
+        lambda a, s, b: ops.fwht_quantize(a, b, signs=s,
+                                          scale=4096 ** -0.5),
+        x, signs, noise)
+    print(f"fwht+quant fused   (256,4096): {us_fq:10.1f} us")
+    rows.append(("kernel_fwht_quant_fused_us", round(us_fq, 1), None))
     return rows

@@ -42,8 +42,9 @@ if _REPO_ROOT not in sys.path:
 # deterministic simulation metrics the regression gate compares;
 # check_regression.py separately skips the _wall_s/_us/kernel timing
 # keys, which are machine-dependent)
-_KEY_PREFIXES = ("fig1e2e_", "fig2_", "fig3_", "fig4_", "fig5_", "fig6_",
-                 "fig7_", "fig8_", "fig9_", "kernel_", "smoke_", "timing_")
+_KEY_PREFIXES = ("engine_", "fig1e2e_", "fig2_", "fig3_", "fig4_", "fig5_",
+                 "fig6_", "fig7_", "fig8_", "fig9_", "kernel_", "smoke_",
+                 "timing_")
 
 _DEFAULT_OUT = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_sim.json")
@@ -91,11 +92,12 @@ class _Sections:
 
 def run_full(quick: bool) -> _Sections:
     from benchmarks import (table1_qp_state, table2_resources,
-                            fig2_tail_latency, fig1_e2e_loss_tolerance,
-                            fig3_scale_sweep, fig4_cross_pod_tail,
-                            fig5_schedule_tail, fig6_scale_schedule,
-                            fig7_fault_resilience, fig8_serving_tail,
-                            fig9_tail_attribution, kernel_bench, roofline)
+                            engine_backend, fig2_tail_latency,
+                            fig1_e2e_loss_tolerance, fig3_scale_sweep,
+                            fig4_cross_pod_tail, fig5_schedule_tail,
+                            fig6_scale_schedule, fig7_fault_resilience,
+                            fig8_serving_tail, fig9_tail_attribution,
+                            kernel_bench, roofline)
     s = _Sections()
     s.add("table1", table1_qp_state.run)
     s.add("table2", table2_resources.run)
@@ -118,6 +120,7 @@ def run_full(quick: bool) -> _Sections:
     s.add("fig9", fig9_tail_attribution.run)
     s.add("kernels", kernel_bench.run)
     s.add("roofline", roofline.run)
+    s.add("engine", engine_backend.run)
     return s
 
 
@@ -126,13 +129,14 @@ def run_smoke() -> _Sections:
     2-pod topology case + one ring-vs-hier schedule A/B + one
     window-policy (round-vs-phase) A/B + one stall fault-injection
     cell + one serving incast sweep + one recorded tail-attribution
-    cell, about a minute, exercising the same code paths as the full
-    run."""
-    from benchmarks import (fig2_tail_latency, fig1_e2e_loss_tolerance,
-                            fig4_cross_pod_tail, fig5_schedule_tail,
-                            fig6_scale_schedule, fig7_fault_resilience,
-                            fig8_serving_tail, fig9_tail_attribution,
-                            kernel_bench)
+    cell + one jax-vs-numpy engine-backend throughput cell (its
+    speedup key is floor-gated at 1.0x), about a minute, exercising
+    the same code paths as the full run."""
+    from benchmarks import (engine_backend, fig2_tail_latency,
+                            fig1_e2e_loss_tolerance, fig4_cross_pod_tail,
+                            fig5_schedule_tail, fig6_scale_schedule,
+                            fig7_fault_resilience, fig8_serving_tail,
+                            fig9_tail_attribution, kernel_bench)
     from repro.core.transport import SimParams, NetworkParams
     s = _Sections()
     s.add("fig2", fig2_tail_latency.run,
@@ -153,6 +157,7 @@ def run_smoke() -> _Sections:
     s.add("kernels", lambda: [
         (f"smoke_{n}" if n.startswith("kernel_") else n, v, r)
         for n, v, r in kernel_bench.run()])
+    s.add("engine", engine_backend.run, smoke=True)
     return s
 
 

@@ -35,10 +35,9 @@ from repro.core.transport import (BatchedEngine, BatchedSimParams,
 
 
 def _dump_trace(rec, path, **meta):
-    obj = write_trace(rec, path, meta=meta or None)
-    n = sum(1 for e in obj["traceEvents"] if e["ph"] == "X")
-    print(f"\nwrote {path} ({n} slices, schema-validated) — open in "
-          "ui.perfetto.dev")
+    counts = write_trace(rec, path, meta=meta or None)
+    print(f"\nwrote {path} ({counts.get('X', 0)} slices, "
+          "schema-validated per chunk) — open in ui.perfetto.dev")
 
 
 def main():
@@ -68,6 +67,12 @@ def main():
                          "the schedule's phase blocks by budget_frac "
                          "(params.WindowPolicy)")
     ap.add_argument("--nodes", type=int, default=128)
+    ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
+                    help="engine backend for the flat-engine and "
+                         "--scale-sweep modes: numpy (bit-pinned "
+                         "reference) or the jitted jax hot loop "
+                         "(agrees within rtol 1e-5; faster at scale — "
+                         "docs/ARCHITECTURE.md 'Engine backends')")
     ap.add_argument("--faults", type=str, default=None, metavar="KIND:RATE",
                     help="seeded fault injection, e.g. stall:1e-4, "
                          "crash:3e-5, flap:1e-3, rail:0.3, "
@@ -83,6 +88,14 @@ def main():
     if args.trace and (args.scale_sweep or args.sweep_timeout):
         ap.error("--trace supports the default, --faults and "
                  "--multi-pod modes (the sweeps run many engines)")
+    if args.backend == "jax":
+        if args.trace:
+            ap.error("--backend jax: the flight recorder needs the "
+                     "numpy engine (the recorder is a numpy overlay)")
+        if args.multi_pod or args.sweep_timeout or not (
+                args.faults or args.scale_sweep):
+            ap.error("--backend jax supports the flat-engine "
+                     "(--faults) and --scale-sweep modes")
 
     sim = CollectiveSimulator(SimParams())
 
@@ -95,13 +108,15 @@ def main():
         if fault is not None:
             p = dataclasses.replace(p, fault=fault)
         rec = TraceRecorder() if args.trace else None
-        eng = BatchedEngine(p, recorder=rec)
+        eng = BatchedEngine(p, recorder=rec, backend=args.backend)
         tr = eng.traces(list(DESIGNS), args.rounds, args.seed,
                         legacy_streams=False)
         base = eng.assemble(tr["roce"], args.seed)
         to = float(np.percentile(base.times_us, 50) + base.times_us.std())
         print((f"faults={fault.tag} " if fault else "")
               + f"nodes={args.nodes} rounds={args.rounds}"
+              + (f" backend={args.backend}" if args.backend != "numpy"
+                 else "")
               + (" [flight recorder on]" if rec else ""))
         print(f"{'design':10s} {'p50 ms':>8s} {'p99 ms':>8s} "
               f"{'loss %':>7s} {'faulted':>8s} {'gupf':>6s} "
@@ -153,7 +168,8 @@ def main():
     if args.scale_sweep:
         res = sweep(BatchedSimParams(
             n_nodes=(128, 256, 512), message_mb=(8.0, 25.0),
-            seeds=(args.seed, args.seed + 1), n_rounds=args.rounds))
+            seeds=(args.seed, args.seed + 1), n_rounds=args.rounds,
+            backend=args.backend))
         print(f"{'design':10s} {'nodes':>6s} {'MB':>5s} "
               f"{'p99 ms (mean+-sd)':>18s}")
         for d in res.params.designs:

@@ -62,16 +62,32 @@ def lossy_psum(x: jax.Array, axis_name: AxisNames, *, key: jax.Array,
                drop_rate: jax.Array, signs: jax.Array,
                code: coding.HadamardCode,
                use_pallas: bool = True,
+               quantize_wire: bool = False,
                constrain=None, out_blocks: bool = False
                ) -> tuple[jax.Array, jax.Array]:
     """Best-effort AllReduce of a flat f32 payload.
 
     Returns (unbiased sum estimate, realized received fraction).
     ``signs``/``code`` must be identical on every participant.
+
+    ``quantize_wire=True`` additionally quantizes each peer's wire
+    contribution to absmax int8 per rotation block before the reduce
+    (``coding.encode_quantized`` — rotate and quantize fused in one
+    Pallas kernel), modeling a 4x-smaller collective payload; the
+    stochastic-rounding noise key is derived from ``key`` per peer, so
+    the ``False`` path's draws are untouched.
     """
     peers = _axis_size(axis_name)
-    wire = coding.encode(x, signs, code, use_pallas=use_pallas,
-                         constrain=constrain)
+    if quantize_wire:
+        nk = jax.random.fold_in(_peer_key(key, axis_name), 1)
+        q_wire, scales = coding.encode_quantized(
+            x, signs, code, nk, use_pallas=use_pallas, constrain=constrain)
+        wire = coding.dequantize_wire(q_wire, scales)
+        if constrain is not None:
+            wire = constrain(wire, "wire")
+    else:
+        wire = coding.encode(x, signs, code, use_pallas=use_pallas,
+                             constrain=constrain)
     mask = arrival_mask(_peer_key(key, axis_name), code.n_rot, drop_rate)
     contrib = wire * mask[:, None].astype(wire.dtype)
     counts = mask.astype(jnp.float32)

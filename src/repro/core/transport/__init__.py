@@ -21,7 +21,8 @@ from repro.core.transport.telemetry import (
     CAUSES, COMPONENTS, ConservationError, DesignRecord, DropProvenance,
     TraceRecorder, audit_round, provenance_from_record, provenance_heuristic)
 from repro.core.transport.trace_export import (
-    to_trace_events, validate_trace, write_trace)
+    iter_trace_events, to_trace_events, validate_events, validate_trace,
+    write_trace)
 
 __all__ = [
     "SimParams", "NetworkParams", "DcqcnParams", "ReliabilityParams",
@@ -39,5 +40,6 @@ __all__ = [
     "CAUSES", "COMPONENTS", "ConservationError", "DesignRecord",
     "DropProvenance", "TraceRecorder", "audit_round",
     "provenance_from_record", "provenance_heuristic",
-    "to_trace_events", "validate_trace", "write_trace",
+    "iter_trace_events", "to_trace_events", "validate_events",
+    "validate_trace", "write_trace",
 ]

@@ -28,24 +28,37 @@ class DcqcnState:
                    alpha=np.ones(shape), good_stages=np.zeros(shape, int))
 
 
-def step(state: DcqcnState, cnp_received: np.ndarray, p: DcqcnParams) -> DcqcnState:
-    """One control interval: apply CNP cuts / increases per flow."""
-    r, t, a, g = state.rate, state.target, state.alpha, state.good_stages
+def step_math(r, t, a, g, cnp_received, p: DcqcnParams, xp=np):
+    """One control interval's update rule on raw state arrays.
 
+    The single formula source for both backends: ``step()`` applies it
+    with ``xp=np`` (bit-identical to the historical inline form), and
+    the jax backend's ``lax.scan`` body applies it to f64 tracers with
+    ``xp=jax.numpy``.  Returns ``(rate, target, alpha, good_stages)``.
+    """
     # --- congestion: multiplicative decrease, alpha <- EWMA toward 1
-    a_new = np.where(cnp_received, (1 - p.alpha_g) * a + p.alpha_g, (1 - p.alpha_g) * a)
-    t_new = np.where(cnp_received, r, t)
-    r_cut = np.maximum(r * (1 - a_new / 2), p.rate_decrease_floor)
+    a_new = xp.where(cnp_received, (1 - p.alpha_g) * a + p.alpha_g,
+                     (1 - p.alpha_g) * a)
+    t_new = xp.where(cnp_received, r, t)
+    r_cut = xp.maximum(r * (1 - a_new / 2), p.rate_decrease_floor)
 
     # --- recovery: additive toward target, hyper after sustained calm
-    g_new = np.where(cnp_received, 0, g + 1)
-    add = np.minimum(t_new, r + p.additive_increase)
-    hyper = np.minimum(1.0, r + p.hyper_increase)
-    r_up = np.where(g_new > p.hyper_after, hyper, add)
+    g_new = xp.where(cnp_received, 0, g + 1)
+    add = xp.minimum(t_new, r + p.additive_increase)
+    hyper = xp.minimum(1.0, r + p.hyper_increase)
+    r_up = xp.where(g_new > p.hyper_after, hyper, add)
 
-    rate = np.clip(np.where(cnp_received, r_cut, r_up), p.min_rate, 1.0)
-    return DcqcnState(rate=rate, target=np.clip(t_new, p.min_rate, 1.0),
-                      alpha=a_new, good_stages=g_new)
+    rate = xp.clip(xp.where(cnp_received, r_cut, r_up), p.min_rate, 1.0)
+    return rate, xp.clip(t_new, p.min_rate, 1.0), a_new, g_new
+
+
+def step(state: DcqcnState, cnp_received: np.ndarray, p: DcqcnParams) -> DcqcnState:
+    """One control interval: apply CNP cuts / increases per flow."""
+    rate, target, alpha, good = step_math(
+        state.rate, state.target, state.alpha, state.good_stages,
+        cnp_received, p)
+    return DcqcnState(rate=rate, target=target, alpha=alpha,
+                      good_stages=good)
 
 
 # ----------------------------------------------------------------------
@@ -69,6 +82,32 @@ def step(state: DcqcnState, cnp_received: np.ndarray, p: DcqcnParams) -> DcqcnSt
 # gaps in closed form — exactly matching the step()-by-step recurrence.
 
 
+def calm_ramp(r, t, g, i, p: DcqcnParams, dtype=np.float64, xp=np):
+    """Recovery-ramp rate after ``i`` consecutive no-CNP updates, on raw
+    state arrays (``r``/``t`` already in ``dtype``, ``g`` int32).
+
+    The single ramp-formula source for both backends: ``_calm_rates``
+    wraps it for the numpy engine (bit-identical to the historical
+    inline form) and the jax scan body evaluates it twice per step —
+    once in f32 for the emitted trace, once in f64 for state advance —
+    with ``xp=jax.numpy``.
+    """
+    k = xp.clip(np.int32(p.hyper_after) - g, 0, i)  # additive steps among i
+    kf = k.astype(dtype)
+    # invariant: k > 0 implies r <= t (hyper is the only way past target,
+    # and it requires good_stages > hyper_after, i.e. k == 0)
+    r_add = xp.where(k > 0,
+                     xp.minimum(t, r + dtype(p.additive_increase) * kf), r)
+    r_i = xp.where(i > k,
+                   xp.minimum(dtype(1.0),
+                              r_add + dtype(p.hyper_increase)
+                              * (i - k).astype(dtype)),
+                   r_add)
+    # no clip needed: both ramps start at r >= min_rate and saturate at
+    # min(target, 1) / 1.0, matching step()'s clip exactly
+    return r_i
+
+
 def _calm_rates(state: DcqcnState, i: np.ndarray, p: DcqcnParams,
                 dtype=np.float64) -> np.ndarray:
     """Rate after ``i`` consecutive no-CNP updates of ``state`` (exact).
@@ -81,20 +120,7 @@ def _calm_rates(state: DcqcnState, i: np.ndarray, p: DcqcnParams,
     r = state.rate.astype(dtype, copy=False)
     t = state.target.astype(dtype, copy=False)
     g = state.good_stages.astype(np.int32, copy=False)
-    k = np.clip(np.int32(p.hyper_after) - g, 0, i)  # additive steps among i
-    kf = k.astype(dtype)
-    # invariant: k > 0 implies r <= t (hyper is the only way past target,
-    # and it requires good_stages > hyper_after, i.e. k == 0)
-    r_add = np.where(k > 0,
-                     np.minimum(t, r + dtype(p.additive_increase) * kf), r)
-    r_i = np.where(i > k,
-                   np.minimum(dtype(1.0),
-                              r_add + dtype(p.hyper_increase)
-                              * (i - k).astype(dtype)),
-                   r_add)
-    # no clip needed: both ramps start at r >= min_rate and saturate at
-    # min(target, 1) / 1.0, matching step()'s clip exactly
-    return r_i
+    return calm_ramp(r, t, g, i, p, dtype)
 
 
 def _advance_calm(state: DcqcnState, L: int, p: DcqcnParams) -> DcqcnState:

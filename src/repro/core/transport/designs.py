@@ -48,6 +48,62 @@ class TransferResult:
     total_pkts: np.ndarray
 
 
+# ----------------------------------------------------------------------
+# Loss-machinery draw sequences, shared verbatim by ``transfer()`` and
+# the jax backend's host draw pass (engine_jax).  The draws depend only
+# on the drop curve — never on the DCQCN rate — which is exactly what
+# lets the jax backend split each design into a host-side draw pass
+# (these helpers) and a jitted rate-dependent time assembly.  Draw
+# *order* here is the replay contract: reordering a single call shifts
+# every later value in the design's transfer substream.
+# ----------------------------------------------------------------------
+
+def roce_loss_episodes(n_pkts: int, pf: np.ndarray,
+                       rel: ReliabilityParams, net: NetworkParams,
+                       rng: np.random.Generator) -> list:
+    """The go-back-N recovery draws over a drop-capable subset.
+
+    Returns ``max_retries`` episodes of ``(has_loss, n_resend,
+    detect_us)``; completion-time excess is ``sum(where(has_loss,
+    detect + n_resend * pkt_time, 0))`` over the episodes.  No draw
+    depends on an accumulated time, so hoisting them out of the
+    accumulation loop consumes the stream identically.
+    """
+    k = rng.binomial(n_pkts, pf)
+    tail_lost = rng.random(pf.size) < pf    # last pkt's own fate
+    episodes = []
+    remaining = k
+    for _ in range(rel.max_retries):
+        has_loss = remaining > 0
+        pos = rng.integers(0, n_pkts, pf.size)  # first-loss position
+        n_resend = np.where(has_loss, n_pkts - pos, 0)
+        detect = np.where(tail_lost, rel.rto_us,
+                          rel.nack_delay_us + net.base_rtt_us)
+        episodes.append((has_loss, n_resend, detect))
+        # losses within the retransmitted burst
+        remaining = rng.binomial(n_resend, pf)
+        tail_lost = tail_lost & (rng.random(pf.size) < pf)
+    return episodes
+
+
+def sr_loss_draws(n_pkts: int, pf: np.ndarray, rng: np.random.Generator
+                  ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Selective-repeat (irn / srnic) loss draws over a drop-capable
+    subset: ``(k, tail_lost, k2)`` — first-round losses, the last
+    packet's own fate, and the re-lost second round."""
+    k = rng.binomial(n_pkts, pf)
+    tail_lost = rng.random(pf.size) < pf
+    k2 = rng.binomial(k, pf)
+    return k, tail_lost, k2
+
+
+def celeris_loss_draws(n_pkts: int, pf: np.ndarray,
+                       rng: np.random.Generator) -> np.ndarray:
+    """Celeris drop draws over a drop-capable subset: packets that
+    simply never arrive (no recovery)."""
+    return rng.binomial(n_pkts, pf)
+
+
 def transfer(design: str, n_pkts: int, occ: np.ndarray, rate: np.ndarray,
              drop_p: np.ndarray, pfc_pause: np.ndarray, queue_delay: np.ndarray,
              rel: ReliabilityParams, net: NetworkParams,
@@ -89,21 +145,13 @@ def transfer(design: str, n_pkts: int, occ: np.ndarray, rate: np.ndarray,
         if idx.size:
             pf = np.ascontiguousarray(p).ravel()[idx]
             ptf = np.ascontiguousarray(pkt_time).ravel()[idx]
-            k = rng.binomial(n_pkts, pf)
-            tail_lost = rng.random(idx.size) < pf    # last pkt's own fate
             ex = np.zeros(idx.size)
-            # go-back-N episodes (up to max_retries)
-            remaining = k
-            for _ in range(rel.max_retries):
-                has_loss = remaining > 0
-                pos = rng.integers(0, n_pkts, idx.size)  # first-loss position
-                n_resend = np.where(has_loss, n_pkts - pos, 0)
-                detect = np.where(tail_lost, rel.rto_us,
-                                  rel.nack_delay_us + net.base_rtt_us)
+            # go-back-N episodes (up to max_retries); the draw sequence
+            # is the shared helper's — episode accumulation order is
+            # unchanged, so the sum rounds exactly as it always did
+            for has_loss, n_resend, detect in roce_loss_episodes(
+                    n_pkts, pf, rel, net, rng):
                 ex += np.where(has_loss, detect + n_resend * ptf, 0.0)
-                # losses within the retransmitted burst
-                remaining = rng.binomial(n_resend, pf)
-                tail_lost = tail_lost & (rng.random(idx.size) < pf)
             # .flat, not .ravel(): the batched engine can hand in
             # non-C-contiguous blocks (large advanced-indexed phase
             # views), where ravel() silently returns a copy and the
@@ -123,15 +171,13 @@ def transfer(design: str, n_pkts: int, occ: np.ndarray, rate: np.ndarray,
         if idx.size:
             pf = np.ascontiguousarray(drop_p).ravel()[idx]
             ptf = np.ascontiguousarray(pkt_time).ravel()[idx]
-            k = rng.binomial(n_pkts, pf)
-            tail_lost = rng.random(idx.size) < pf
+            k, tail_lost, k2 = sr_loss_draws(n_pkts, pf, rng)
             detect = np.where(tail_lost, rel.rto_low_us,
                               rel.nack_delay_us + net.base_rtt_us)
             ex = np.where(k > 0, detect + k * ptf, 0.0)
             if design == "srnic":
                 ex += k * rel.host_slowpath_us      # host slow-path per loss
             # selective-repeat second round for re-lost packets
-            k2 = rng.binomial(k, pf)
             ex += np.where(k2 > 0, rel.rto_low_us + k2 * ptf, 0.0)
             t.flat[idx] += ex.astype(t.dtype)
             if parts is not None:
@@ -145,7 +191,7 @@ def transfer(design: str, n_pkts: int, occ: np.ndarray, rate: np.ndarray,
         delivered = np.full(shape, n_pkts, dtype=serialize.dtype)
         if idx.size:
             pf = np.ascontiguousarray(drop_p).ravel()[idx]
-            delivered.flat[idx] -= rng.binomial(n_pkts, pf)
+            delivered.flat[idx] -= celeris_loss_draws(n_pkts, pf, rng)
         # no recovery: wire time only; lost packets never arrive.
         # Streaming push -> queue latency mostly hidden (see above).
         t = (serialize + CELERIS_QUEUE_OVERLAP * queue_delay

@@ -66,6 +66,7 @@ Entry points
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, Sequence
 
 import numpy as np
@@ -73,7 +74,7 @@ import numpy as np
 from repro.core import timeout as timeout_mod
 from repro.core.transport import dcqcn, designs, faults, network, replay, topology
 from repro.core.transport import schedule as schedule_mod
-from repro.core.transport.params import SimParams, WindowPolicy
+from repro.core.transport.params import SimParams, WindowPolicy, parse_backend
 
 # Engine-native random sub-streams, all derived from the user seed.
 # (The per-step simulator interleaved every draw into one stream; the
@@ -292,7 +293,8 @@ class BatchedEngine:
 
     def __init__(self, params: SimParams | None = None, *,
                  plan: "schedule_mod.FlowPlan | None" = None,
-                 recorder: "telemetry_mod.TraceRecorder | None" = None):
+                 recorder: "telemetry_mod.TraceRecorder | None" = None,
+                 backend: str = "numpy"):
         self.p = params or SimParams()
         self.plan_override = plan
         # opt-in flight recorder (telemetry.TraceRecorder): a pure
@@ -300,6 +302,10 @@ class BatchedEngine:
         # arrays the physics already computes and draws nothing, so
         # seeded stats are bit-identical with or without it
         self.recorder = recorder
+        # compute backend: "numpy" is the bit-pinning reference;
+        # "jax" routes the shared-fabric hot loop through the jitted
+        # engine_jax core (tolerance contract: rtol 1e-5 vs numpy)
+        self.backend = parse_backend(backend)
 
     # ------------------------------------------------------------------
     def _geometry(self, seed: int):
@@ -426,6 +432,26 @@ class BatchedEngine:
             raise ValueError(
                 f"ecn_threshold={net.ecn_threshold} must not exceed "
                 f"loss_knee={net.loss_knee}")
+        if self.backend == "jax":
+            if legacy_streams:
+                raise ValueError(
+                    "backend='jax' computes engine-native "
+                    "(shared-fabric) traces only: pass "
+                    "legacy_streams=False (run() and sweep() flip it "
+                    "automatically)")
+            if per_node_for:
+                raise ValueError(
+                    "backend='jax' does not materialize per-flow "
+                    "(T, n) arrays; use backend='numpy' for "
+                    "per_node_for traces")
+            if self.recorder is not None:
+                raise ValueError(
+                    "a TraceRecorder requires backend='numpy' (its "
+                    "hooks ride the numpy per-phase pass)")
+            from repro.core.transport import engine_jax
+            return engine_jax.traces_batched(
+                self, list(design_list), n_rounds, [seed],
+                round_block=round_block)[0]
         if self.p.topo.hierarchical and legacy_streams:
             # legacy mode replays the flat sequential simulator's random
             # streams; there is no pre-topology stream to replay for a
@@ -985,11 +1011,22 @@ class BatchedEngine:
             init_timeout=init_to, min_timeout=init_to * 0.25,
             max_timeout=init_to * 8.0, alpha=0.25)
 
-        if not adaptive and window == "round":
-            return _pack(*self._assemble_round_window_fixed(
-                nat, deliv, tot_sum, init_to * 1e6, groups),
-                design="celeris")
-        if not adaptive and window == "phase":
+        if not adaptive and window in ("round", "phase"):
+            if self.backend == "jax":
+                # jitted twin of the fixed windows below; the round
+                # window is the single-phase case of the phase window
+                # (value-identical, see engine_jax)
+                from repro.core.transport import engine_jax
+                jax_rows, jax_frac = (
+                    (ph_rows, ph_frac) if window == "phase"
+                    else ([np.arange(steps)], np.ones(1)))
+                return _pack(*engine_jax.assemble_window_fixed(
+                    nat, deliv, tot_sum, init_to * 1e6, groups,
+                    jax_rows, jax_frac), design="celeris")
+            if window == "round":
+                return _pack(*self._assemble_round_window_fixed(
+                    nat, deliv, tot_sum, init_to * 1e6, groups),
+                    design="celeris")
             return _pack(*self._assemble_phase_window_fixed(
                 nat, deliv, tot_sum, init_to * 1e6, groups, ph_rows,
                 ph_frac), design="celeris")
@@ -1149,6 +1186,9 @@ class BatchedEngine:
         if self.recorder is not None:
             # telemetry hooks ride the shared-fabric per-phase pass
             legacy_streams = False
+        if self.backend == "jax":
+            # the jax backend is engine-native by construction
+            legacy_streams = False
         tr = self.traces([design], n_rounds, seed,
                          legacy_streams=legacy_streams, per_node_for=keep)
         return self.assemble(tr[design], seed,
@@ -1214,6 +1254,9 @@ class BatchedSimParams:
     celeris_timeout_us: float | None = None
     timeout_scale: float = 1.0
     legacy_streams: bool = False      # sweeps share one fabric trace
+    # "numpy" (bit-pinned reference) | "jax" (jitted core; batches the
+    # whole seed axis of each cell in one vmapped pass)
+    backend: str = "numpy"
     base: SimParams = SimParams()
 
     def fault_params(self) -> tuple:
@@ -1383,7 +1426,16 @@ def sweep(params: BatchedSimParams | None = None, *, progress=None
             raise ValueError("sweep windows must be 'round' or 'phase' "
                              "(window='step' needs per-flow traces; use "
                              "BatchedEngine.run)")
+    backend = parse_backend(bp.backend)
+    if backend == "jax" and bp.legacy_streams:
+        raise ValueError("backend='jax' is incompatible with "
+                         "legacy_streams=True (engine-native only)")
     res = SweepResult(params=bp, stats={})
+    # liveness accounting: one "cell" = one (config, seed) physics pass
+    total_cells = (len(bp.n_nodes) * len(bp.message_mb) * len(bp.n_pods)
+                   * len(bp.schedules) * len(fault_grid) * len(bp.seeds))
+    done_cells = 0
+    sweep_t0 = time.perf_counter()
     for nn in bp.n_nodes:
         for mb in bp.message_mb:
             for npods in bp.n_pods:
@@ -1402,14 +1454,31 @@ def sweep(params: BatchedSimParams | None = None, *, progress=None
                         topo=dataclasses.replace(bp.base.topo,
                                                  n_pods=npods),
                         fault=fp)
-                    eng = BatchedEngine(p)
-                    for s in bp.seeds:
+                    eng = BatchedEngine(p, backend=backend)
+                    trs = None
+                    if backend == "jax":
+                        # the jax core batches the whole seed axis of
+                        # this config in one vmapped pass
+                        from repro.core.transport import engine_jax
+                        trs = engine_jax.traces_batched(
+                            eng, list(bp.designs), bp.n_rounds,
+                            list(bp.seeds))
+                    for si, s in enumerate(bp.seeds):
                         if progress is not None:
-                            progress(f"n_nodes={nn} message_mb={mb} "
-                                     f"n_pods={npods} schedule={sched} "
-                                     f"fault={fp.tag} seed={s}")
-                        tr = eng.traces(list(bp.designs), bp.n_rounds, s,
-                                        legacy_streams=bp.legacy_streams)
+                            el = time.perf_counter() - sweep_t0
+                            rate = done_cells / el if el > 0 else 0.0
+                            progress(f"[{backend}] n_nodes={nn} "
+                                     f"message_mb={mb} n_pods={npods} "
+                                     f"schedule={sched} fault={fp.tag} "
+                                     f"seed={s} ({done_cells}/"
+                                     f"{total_cells} cells, "
+                                     f"{rate:.2f} cells/s)")
+                        if trs is not None:
+                            tr = trs[si]
+                        else:
+                            tr = eng.traces(list(bp.designs), bp.n_rounds,
+                                            s,
+                                            legacy_streams=bp.legacy_streams)
                         to = bp.celeris_timeout_us
                         if "celeris" in bp.designs and to is None:
                             if "roce" in bp.designs:
@@ -1435,6 +1504,7 @@ def sweep(params: BatchedSimParams | None = None, *, progress=None
                                         res.stats[res._key(
                                             d, nn, mb, s, npods, sched,
                                             w2, fp.tag)] = st
+                        done_cells += 1
     return res
 
 

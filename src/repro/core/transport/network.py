@@ -118,26 +118,31 @@ class ClosFabric:
 
 
 # ----------------------------------------------------------------------
-# Fabric response curves — single source of truth for both the per-step
-# ClosFabric methods and the batched engine's whole-trace math.  The
-# bit-exact stream replay depends on both sides agreeing on where the
-# drop probability is exactly zero, so never fork these formulas.
+# Fabric response curves — single source of truth for the per-step
+# ClosFabric methods, the batched engine's whole-trace math, *and* the
+# jax backend (engine_jax traces these same functions).  The bit-exact
+# stream replay depends on every consumer agreeing on where the drop
+# probability is exactly zero, so never fork these formulas.  They are
+# written array-polymorphically (operator / method syntax only — the
+# ``.clip`` method is what both numpy arrays and jax tracers share) so
+# one formula body serves both backends; for numpy inputs each is
+# bit-identical to its historical ``np.clip`` form.
 # ----------------------------------------------------------------------
 
-def queue_delay_us(p: NetworkParams, occ: np.ndarray) -> np.ndarray:
+def queue_delay_us(p: NetworkParams, occ) -> np.ndarray:
     return p.queue_capacity_us * occ ** 3
 
 
-def avail_bandwidth(p: NetworkParams, occ: np.ndarray) -> np.ndarray:
-    return np.clip(1.0 - p.bg_bandwidth_weight * occ, p.min_avail_frac, 1.0)
+def avail_bandwidth(p: NetworkParams, occ) -> np.ndarray:
+    return (1.0 - p.bg_bandwidth_weight * occ).clip(p.min_avail_frac, 1.0)
 
 
-def ecn_mark_prob(p: NetworkParams, occ: np.ndarray) -> np.ndarray:
-    return np.clip((occ - p.ecn_threshold) / (1 - p.ecn_threshold), 0, 1)
+def ecn_mark_prob(p: NetworkParams, occ) -> np.ndarray:
+    return ((occ - p.ecn_threshold) / (1 - p.ecn_threshold)).clip(0, 1)
 
 
-def drop_prob(p: NetworkParams, occ: np.ndarray) -> np.ndarray:
-    x = np.clip((occ - p.loss_knee) / (1 - p.loss_knee), 0, 1)
+def drop_prob(p: NetworkParams, occ) -> np.ndarray:
+    x = ((occ - p.loss_knee) / (1 - p.loss_knee)).clip(0, 1)
     return p.loss_max_prob * x ** 2
 
 

@@ -273,6 +273,20 @@ class WorkloadParams:
     schedule: str = "ring"
 
 
+# Engine compute backends (engine.BatchedEngine / engine_jax).  The
+# numpy engine is the bit-pinning reference; the jax backend matches it
+# within rtol 1e-5 (see engine_jax's tolerance contract) and batches
+# seeds on the accelerator.
+BACKENDS = ("numpy", "jax")
+
+
+def parse_backend(v: str) -> str:
+    v = str(v)
+    if v not in BACKENDS:
+        raise ValueError(f"unknown backend {v!r}; choose from {BACKENDS}")
+    return v
+
+
 @dataclasses.dataclass(frozen=True)
 class SimParams:
     net: NetworkParams = NetworkParams()

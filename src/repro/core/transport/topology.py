@@ -178,6 +178,21 @@ def overlay_curves(net: NetworkParams, topo: TopologyParams,
     return occ_eff
 
 
+def dci_oversub_factor(topo: TopologyParams, hg: HierGeometry) -> np.ndarray:
+    """The f32 oversubscription factor charged to each cross-pod column
+    (``np.float32`` scalar, or ``(n_cross,)`` f32 for per-pod vectors —
+    each flow pays the max of its two endpoint pods' ratios).  Shared
+    by :func:`overlay_rates` and the jax backend's static column
+    multipliers, so both backends charge the identical factor."""
+    x = hg.cross
+    o = topo.dci_oversubscription
+    if np.ndim(o) == 0:
+        return np.float32(o)
+    ov = per_pod_array(o, topo.n_pods, "dci_oversubscription")
+    return np.maximum(ov[hg.src_pod[x]],
+                      ov[hg.dst_pod[x]]).astype(np.float32)
+
+
 def overlay_rates(net: NetworkParams, topo: TopologyParams,
                   hg: HierGeometry, occ_eff: np.ndarray, rate: np.ndarray,
                   occ32: np.ndarray, qd: np.ndarray,
@@ -198,13 +213,7 @@ def overlay_rates(net: NetworkParams, topo: TopologyParams,
     x = hg.cross
     if x.size == 0:
         return
-    o = topo.dci_oversubscription
-    if np.ndim(o) == 0:
-        o32 = np.float32(o)
-    else:
-        ov = per_pod_array(o, topo.n_pods, "dci_oversubscription")
-        o32 = np.maximum(ov[hg.src_pod[x]],
-                         ov[hg.dst_pod[x]]).astype(np.float32)
+    o32 = dci_oversub_factor(topo, hg)
     eff32 = occ_eff.astype(np.float32)
     occ32[:, x] = eff32
     qd[:, x] = network.queue_delay_us(net, eff32) * o32

@@ -63,6 +63,81 @@ def _fwht_kernel(x_ref, ha_ref, hb_ref, *rest, a: int, b: int):
     o_ref[...] = y.reshape(rows, a * b).astype(o_ref.dtype)
 
 
+def _fwht_quant_kernel(x_ref, ha_ref, hb_ref, *rest, a: int, b: int):
+    q_ref, scale_ref = rest[-2:]
+    if len(rest) == 4:
+        signs_ref, noise_ref = rest[0], rest[1]
+    else:
+        signs_ref, noise_ref = None, rest[0]
+    rows = x_ref.shape[0]
+    x = x_ref[...].astype(jnp.float32).reshape(rows, a, b)
+    if signs_ref is not None:
+        x = x * signs_ref[...].reshape(a, b)[None]
+    ha = ha_ref[...]
+    hb = hb_ref[...]
+    t = jax.lax.dot_general(
+        x, hb, (((2,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    y = jax.lax.dot_general(
+        t, ha, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    y = jnp.swapaxes(y, 1, 2).reshape(rows, a * b)
+    # quantize while the rotated tile is still in VMEM: the unfused
+    # pair writes the f32 rotation to HBM and reads it straight back —
+    # this kernel's whole point is skipping that round trip, leaving
+    # one f32 read (input) + one int8 write (output) per element
+    absmax = jnp.max(jnp.abs(y), axis=-1, keepdims=True)
+    qscale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.floor(y / qscale + noise_ref[...].astype(jnp.float32))
+    q_ref[...] = jnp.clip(q, -127, 127).astype(jnp.int8)
+    scale_ref[...] = qscale[:, 0]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "interpret", "scale"))
+def fwht_quantize_pallas(x: jax.Array, noise: jax.Array,
+                         signs: jax.Array | None = None, *,
+                         scale: float = 1.0, block_rows: int = 128,
+                         interpret: bool = True):
+    """Fused FWHT + per-row absmax int8 quantization in one pass.
+
+    The rotate stage is exactly :func:`fwht_pallas` (same two-matmul
+    Kronecker body, same optional Rademacher/scale fusions); its VMEM
+    tile feeds the :mod:`quantize` stage directly.  Returns
+    ``(q int8 (rows, n), scale f32 (rows,))`` — the wire payload of
+    ``coding.encode_quantized``.
+    """
+    rows, n = x.shape
+    assert rows % block_rows == 0, (rows, block_rows)
+    a, b = _kron_factors(n)
+    ha = ref.hadamard_matrix(a) * jnp.float32(scale)
+    hb = ref.hadamard_matrix(b)
+    grid = (rows // block_rows,)
+    in_specs = [
+        pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+        pl.BlockSpec((a, a), lambda i: (0, 0)),
+        pl.BlockSpec((b, b), lambda i: (0, 0)),
+    ]
+    operands = [x, ha, hb]
+    if signs is not None:
+        in_specs.append(pl.BlockSpec((1, n), lambda i: (0, 0)))
+        operands.append(signs.reshape(1, n).astype(jnp.float32))
+    in_specs.append(pl.BlockSpec((block_rows, n), lambda i: (i, 0)))
+    operands.append(noise)
+    return pl.pallas_call(
+        functools.partial(_fwht_quant_kernel, a=a, b=b),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, n), jnp.int8),
+            jax.ShapeDtypeStruct((rows,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*operands)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("block_rows", "interpret", "scale"))
 def fwht_pallas(x: jax.Array, signs: jax.Array | None = None, *,

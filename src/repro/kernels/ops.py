@@ -51,6 +51,29 @@ def fwht(x: jax.Array, *, signs: jax.Array | None = None, scale: float = 1.0,
     return out[:rows0]
 
 
+def fwht_quantize(x: jax.Array, noise: jax.Array, *,
+                  signs: jax.Array | None = None, scale: float = 1.0,
+                  use_pallas: bool = True, block_rows: int = 128):
+    """Fused rotate-then-quantize: the FWHT output feeds the per-row
+    absmax int8 quantizer without a round trip through HBM (what
+    ``coding.encode_quantized`` issues).  Semantically identical to
+    ``quantize_int8(fwht(x, signs=..., scale=...), noise)``.
+    """
+    if not use_pallas:
+        y = ref.fwht(x if signs is None else x * signs[None, :])
+        if scale != 1.0:
+            y = y * scale
+        return ref.quantize_int8(y, noise)
+    rows, n = x.shape
+    block_rows = min(block_rows, max(8, rows))
+    xp, rows0 = _pad_rows(x, block_rows)
+    np_, _ = _pad_rows(noise, block_rows)
+    q, s = _fwht.fwht_quantize_pallas(xp, np_, signs, scale=scale,
+                                      block_rows=block_rows,
+                                      interpret=INTERPRET)
+    return q[:rows0], s[:rows0]
+
+
 def quantize_int8(x: jax.Array, noise: jax.Array, *, use_pallas: bool = True,
                   block_rows: int = 256):
     if not use_pallas:

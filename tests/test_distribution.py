@@ -159,3 +159,35 @@ def test_elastic_restart_across_meshes(tmp_path):
         print('OK')
     """)
     assert "OK" in out
+
+
+def test_lossy_psum_quantized_wire_close_to_f32():
+    """quantize_wire=True (fused rotate+quantize int8 wire) stays an
+    unbiased-ish estimate: zero-drop reduce matches the exact sum to
+    quantization tolerance."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro import sharding as shd
+        from repro.core import coding, lossy_collectives as lc
+        mesh = shd.make_mesh((8,), ('data',))
+        N = 5000
+        code = coding.plan(N)
+        signs = coding.rademacher(jax.random.PRNGKey(7), code)
+        xs = jax.random.normal(jax.random.PRNGKey(0), (8, N))
+        def f(x, key, p):
+            est, frac = lc.lossy_psum(x[0], 'data', key=key, drop_rate=p,
+                                      signs=signs, code=code,
+                                      use_pallas=False, quantize_wire=True)
+            return est[None], frac[None]
+        sm = shd.shard_map(f, mesh=mesh, in_specs=(P('data', None), P(), P()),
+                           out_specs=(P('data', None), P('data')),
+                           check_vma=False)
+        est, frac = jax.jit(sm)(xs, jax.random.PRNGKey(1), jnp.float32(0.0))
+        assert float(frac[0]) == 1.0
+        want = np.asarray(xs.sum(0))
+        err = np.linalg.norm(np.asarray(est[0]) - want) / np.linalg.norm(want)
+        assert err < 0.05, err
+        print('OK')
+    """)
+    assert "OK" in out

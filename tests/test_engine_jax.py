@@ -1,0 +1,170 @@
+"""jax engine backend: numpy <-> jax agreement (ISSUE 9 acceptance).
+
+The numpy engine is the bit-pinning reference; the jitted backend
+(``engine_jax``) replays its random streams host-side and must match
+its physics within the tolerance contract (rtol 1e-5 — observed
+agreement is f32-ulp on step traces, exact on deliveries).  The A/B
+matrix spans schedule geometry (flat ring / 2-pod hier / per-rail),
+fault scenarios, and an incast FlowPlan, across all designs and both
+fixed window policies.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.core.transport import engine_jax
+from repro.core.transport import (BatchedEngine, BatchedSimParams,
+                                  NetworkParams, SimParams, sweep)
+from repro.core.transport.params import (FaultParams, TopologyParams,
+                                         WorkloadParams)
+from repro.serve.traffic import ServeTrafficParams, kv_flow_plan
+
+SMALL = SimParams(net=NetworkParams(n_nodes=32, burst_on_prob=0.0008))
+DESIGNS = ("roce", "irn", "srnic", "celeris")
+RTOL = 1e-5
+
+
+def _small(**kw):
+    return dataclasses.replace(SMALL, **kw)
+
+
+MATRIX = {
+    "ring_flat": (_small(), None),
+    "hier_2pod": (_small(topo=TopologyParams(n_pods=2),
+                         work=WorkloadParams(schedule="hier")), None),
+    "perrail_faulted": (_small(
+        topo=TopologyParams(n_pods=2),
+        work=WorkloadParams(schedule="perrail"),
+        fault=FaultParams.parse("stall:0.003+straggler:0.1")), None),
+    "kv_incast": (_small(), "kv"),
+}
+
+
+def _engines(p, plan_key):
+    plan = kv_flow_plan(ServeTrafficParams()) if plan_key else None
+    kw = dict(plan=plan) if plan is not None else {}
+    return (BatchedEngine(p, **kw),
+            BatchedEngine(p, backend="jax", **kw))
+
+
+@pytest.mark.parametrize("cell", sorted(MATRIX))
+def test_traces_match_numpy(cell):
+    p, plan_key = MATRIX[cell]
+    eng_np, eng_j = _engines(p, plan_key)
+    tr_np = eng_np.traces(DESIGNS, 15, 3, legacy_streams=False)
+    tr_j = eng_j.traces(DESIGNS, 15, 3, legacy_streams=False)
+    for d in DESIGNS:
+        a, b = tr_np[d], tr_j[d]
+        np.testing.assert_allclose(b.nat_us, a.nat_us, rtol=RTOL,
+                                   err_msg=f"{cell}/{d} nat_us")
+        # delivered counts are integer-valued sums: exact
+        np.testing.assert_array_equal(b.deliv, a.deliv,
+                                      err_msg=f"{cell}/{d} deliv")
+        np.testing.assert_array_equal(b.total, a.total)
+        np.testing.assert_array_equal(b.tier_deliv, a.tier_deliv,
+                                      err_msg=f"{cell}/{d} tier")
+        np.testing.assert_array_equal(b.tier_total, a.tier_total)
+        if a.pod_deliv is not None:
+            np.testing.assert_array_equal(b.pod_deliv, a.pod_deliv,
+                                          err_msg=f"{cell}/{d} pod")
+        if a.fault_flows is not None:
+            np.testing.assert_array_equal(b.fault_flows, a.fault_flows)
+
+
+@pytest.mark.parametrize("window", ["round", "phase"])
+@pytest.mark.parametrize("cell", sorted(MATRIX))
+def test_assembled_stats_match_numpy(cell, window):
+    """p99 / delivered fractions / per-tier and per-pod recombination
+    agree through both fixed window assemblies (the jax backend routes
+    celeris windows through the jitted twin)."""
+    p, plan_key = MATRIX[cell]
+    eng_np, eng_j = _engines(p, plan_key)
+    tr_np = eng_np.traces(DESIGNS, 15, 3, legacy_streams=False)
+    tr_j = eng_j.traces(DESIGNS, 15, 3, legacy_streams=False)
+    for d in DESIGNS:
+        kw = (dict(celeris_timeout_us=30_000.0, adaptive=False,
+                   window=window) if d == "celeris" else {})
+        a = eng_np.assemble(tr_np[d], 3, **kw)
+        b = eng_j.assemble(tr_j[d], 3, **kw)
+        np.testing.assert_allclose(
+            np.percentile(b.times_us, 99), np.percentile(a.times_us, 99),
+            rtol=RTOL, err_msg=f"{cell}/{d}/{window} p99")
+        np.testing.assert_allclose(b.recv_frac, a.recv_frac,
+                                   rtol=RTOL, atol=1e-9,
+                                   err_msg=f"{cell}/{d}/{window} frac")
+        np.testing.assert_allclose(b.tier_recv_frac, a.tier_recv_frac,
+                                   rtol=RTOL, atol=1e-9)
+        if a.pod_recv_frac is not None:
+            np.testing.assert_allclose(b.pod_recv_frac, a.pod_recv_frac,
+                                       rtol=RTOL, atol=1e-9)
+        np.testing.assert_allclose(b.mean_loss, a.mean_loss,
+                                   rtol=RTOL, atol=1e-9)
+        np.testing.assert_allclose(b.p99, a.p99, rtol=RTOL)
+
+
+def test_vmapped_batch_equals_per_seed_loop():
+    """One vmapped pass over the seed axis gives the same traces as
+    three independent single-seed calls."""
+    eng = BatchedEngine(SMALL, backend="jax")
+    designs = ("roce", "celeris")
+    batched = engine_jax.traces_batched(eng, designs, 12, [0, 1, 2])
+    for si, s in enumerate((0, 1, 2)):
+        single = engine_jax.traces_batched(eng, designs, 12, [s])[0]
+        for d in designs:
+            np.testing.assert_allclose(batched[si][d].nat_us,
+                                       single[d].nat_us, rtol=1e-7)
+            np.testing.assert_array_equal(batched[si][d].deliv,
+                                          single[d].deliv)
+
+
+def test_jit_cache_reuse():
+    """A second identical call hits the compiled core: the trace-time
+    counter must not move."""
+    eng = BatchedEngine(SMALL, backend="jax")
+    engine_jax.traces_batched(eng, ("irn",), 12, [0, 1])
+    before = engine_jax.TRACE_COUNT[0]
+    engine_jax.traces_batched(eng, ("irn",), 12, [0, 1])
+    assert engine_jax.TRACE_COUNT[0] == before
+
+
+def test_run_and_sweep_route_through_jax():
+    """run() flips legacy_streams itself; sweep(backend='jax') batches
+    the seed axis and matches the numpy sweep within tolerance."""
+    st_j = BatchedEngine(SMALL, backend="jax").run(
+        "celeris", 12, adaptive=False, celeris_timeout_us=30_000.0)
+    st_np = BatchedEngine(SMALL).run(
+        "celeris", 12, adaptive=False, celeris_timeout_us=30_000.0,
+        legacy_streams=False)
+    np.testing.assert_allclose(st_j.times_us, st_np.times_us, rtol=RTOL)
+
+    grid = dict(n_nodes=(32,), message_mb=(4.0,), seeds=(0, 1),
+                n_rounds=8, base=SMALL)
+    msgs = []
+    res_j = sweep(BatchedSimParams(backend="jax", **grid),
+                  progress=msgs.append)
+    res_np = sweep(BatchedSimParams(**grid))
+    assert res_j.stats.keys() == res_np.stats.keys()
+    for k, b in res_j.stats.items():
+        a = res_np.stats[k]
+        np.testing.assert_allclose(np.percentile(b.times_us, 99),
+                                   np.percentile(a.times_us, 99),
+                                   rtol=RTOL, err_msg=str(k))
+        np.testing.assert_allclose(b.recv_frac, a.recv_frac,
+                                   rtol=RTOL, atol=1e-9)
+    # progress reports backend + cells/sec liveness (satellite contract)
+    assert msgs and all(m.startswith("[jax] ") for m in msgs)
+    assert all("cells/s)" in m for m in msgs)
+
+
+def test_backend_guards():
+    eng = BatchedEngine(SMALL, backend="jax")
+    with pytest.raises(ValueError, match="legacy_streams=False"):
+        eng.traces(("irn",), 4, 0)          # legacy default
+    with pytest.raises(ValueError, match="per_node_for"):
+        eng.traces(("celeris",), 4, 0, legacy_streams=False,
+                   per_node_for=("celeris",))
+    with pytest.raises(ValueError, match="backend"):
+        BatchedEngine(SMALL, backend="torch")

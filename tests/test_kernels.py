@@ -86,3 +86,59 @@ def test_masked_unbias_matches_oracle(rows, n):
     got = ops.masked_unbias(y, c, total=4)
     want = ref.masked_unbias(y, c, 4)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+# ------------------------------------------------ fused rotate+quantize
+
+@pytest.mark.parametrize("rows,n", [(8, 128), (3, 256), (100, 1024)])
+def test_fwht_quantize_fused_matches_unfused_pallas(rows, n):
+    """The fused kernel's rotate stage is the same two-matmul body as
+    fwht_pallas, so fused == (pallas fwht -> pallas quantize) exactly."""
+    key = jax.random.PRNGKey(rows + n)
+    x = jax.random.normal(key, (rows, n))
+    signs = jax.random.rademacher(jax.random.fold_in(key, 1), (n,),
+                                  dtype=jnp.float32)
+    noise = jax.random.uniform(jax.random.fold_in(key, 2), (rows, n))
+    q1, s1 = ops.fwht_quantize(x, noise, signs=signs, scale=n ** -0.5)
+    y = ops.fwht(x, signs=signs, scale=n ** -0.5)
+    q2, s2 = ops.quantize_int8(y, noise)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-7)
+
+
+def test_fwht_quantize_matches_oracle_dequantized():
+    """Against the jnp oracle pair the int8 codes may differ by 1 where
+    the butterfly vs matmul rotation differs at f32 ulp; the
+    dequantized payloads agree to quantization-step tolerance."""
+    rows, n = (16, 512)
+    key = jax.random.PRNGKey(9)
+    x = jax.random.normal(key, (rows, n))
+    noise = jax.random.uniform(jax.random.fold_in(key, 2), (rows, n))
+    q1, s1 = ops.fwht_quantize(x, noise, scale=n ** -0.5)
+    q2, s2 = ops.fwht_quantize(x, noise, scale=n ** -0.5,
+                               use_pallas=False)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5)
+    d1 = np.asarray(ops.dequantize_int8(q1, s1))
+    d2 = np.asarray(ops.dequantize_int8(q2, s2))
+    step = np.asarray(s2)[:, None]
+    assert np.all(np.abs(d1 - d2) <= 1.001 * step)
+
+
+def test_encode_quantized_roundtrip():
+    """encode_quantized -> dequantize_wire -> decode recovers the
+    payload to quantization tolerance when nothing is dropped."""
+    from repro.core import coding
+    code = coding.plan(1000, n_rot=256)
+    key = jax.random.PRNGKey(11)
+    signs = coding.rademacher(jax.random.fold_in(key, 0), code)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (1000,))
+    q_wire, scales = coding.encode_quantized(
+        x, signs, code, jax.random.fold_in(key, 2))
+    assert q_wire.dtype == jnp.int8 and q_wire.shape == code.wire_shape
+    wire = coding.dequantize_wire(q_wire, scales)
+    counts = jnp.ones(code.n_rot)
+    out = coding.decode(wire, counts, signs, code, total_peers=1)
+    # absmax/127 per block, rotated back: bound the error loosely
+    tol = float(jnp.max(scales)) * np.sqrt(code.n_rot) * 1.5
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x), atol=tol)
+    assert float(jnp.max(jnp.abs(out - x))) < 0.2

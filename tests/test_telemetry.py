@@ -343,3 +343,53 @@ def test_fig9_smoke_deterministic():
     claims = {k: (v, r) for k, v, r in a if r is not None}
     for k, (v, r) in claims.items():
         assert v == r, (k, v, r)
+
+
+def test_trace_export_streams_in_chunks(tmp_path):
+    """The chunked generator path is event-identical to the monolithic
+    object, write_trace's streamed file parses to the same trace for
+    any chunk size, and each chunk passes the per-chunk schema gate."""
+    _, _, _, rec = _recorded_flat(n_rounds=10)
+    whole = trace_export.to_trace_events(rec, meta={"test": "yes"})
+
+    chunks = list(trace_export.iter_trace_events(rec, chunk_rounds=3))
+    assert len(chunks) > 2          # metadata chunk + several round chunks
+    for c in chunks:
+        trace_export.validate_events(c)   # every chunk stands alone
+    assert [e for c in chunks for e in c] == whole["traceEvents"]
+
+    ref = None
+    for chunk_rounds in (1, 3, 1000):
+        path = tmp_path / f"trace_{chunk_rounds}.json"
+        counts = trace_export.write_trace(rec, str(path), meta={"test": "yes"},
+                                          chunk_rounds=chunk_rounds)
+        loaded = json.load(open(path))
+        assert trace_export.validate_trace(loaded) == counts
+        assert loaded["traceEvents"] == whole["traceEvents"]
+        assert loaded["otherData"] == json.loads(
+            json.dumps(whole["otherData"]))
+        ref = ref or loaded
+        assert loaded == ref            # chunking never changes the file
+
+    with pytest.raises(ValueError, match="chunk_rounds"):
+        list(trace_export.iter_trace_events(rec, chunk_rounds=0))
+
+
+def test_write_trace_removes_partial_file_on_invalid_chunk(tmp_path,
+                                                           monkeypatch):
+    """A schema violation mid-stream must not leave a truncated JSON on
+    disk masquerading as a trace."""
+    _, _, _, rec = _recorded_flat(n_rounds=6)
+    real_iter = trace_export.iter_trace_events
+
+    def poisoned(recorder, **kw):
+        for i, chunk in enumerate(real_iter(recorder, **kw)):
+            if i == 1:      # corrupt the first round chunk, after metadata
+                chunk[0] = dict(chunk[0], ph="Z")
+            yield chunk
+
+    monkeypatch.setattr(trace_export, "iter_trace_events", poisoned)
+    path = tmp_path / "trace.json"
+    with pytest.raises(ValueError, match="unknown ph"):
+        trace_export.write_trace(rec, str(path), chunk_rounds=2)
+    assert not path.exists()
