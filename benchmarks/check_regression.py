@@ -42,7 +42,14 @@ _SKIP_SUFFIXES = ("_wall_s", "_us", "_speedup_x")
 _SKIP_PREFIXES = ("total_bench_wall_s",)
 
 # key -> minimum allowed value; exempt from the symmetric tolerance
-_FLOOR_GATES = {"smoke_engine_speedup": 1.0}
+_FLOOR_GATES = {
+    "smoke_engine_speedup": 1.0,
+    # prioritized cuts must never lose MORE high-priority data than
+    # uniform (arrival) cuts at the same budget; the ratio is
+    # arrival-over-priority, capped upstream (fig10_priority_loss
+    # .RATIO_CAP), so >= 1.0 is the "priority mode works" floor
+    "smoke_fig10_hi_loss_ratio_p2_o8": 1.0,
+}
 
 _DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_sim.json")

@@ -39,8 +39,6 @@ a few seconds, ``smoke_fig6``-prefixed keys.
 """
 import time
 
-import numpy as np
-
 from repro.core.transport import (BatchedSimParams, NetworkParams, SimParams,
                                   sweep, topology)
 

@@ -126,7 +126,7 @@ def _cell_rows(cells, q, prefix, tag, rows):
     for i, c in enumerate(telemetry.CAUSES):
         rows.append((f"{prefix}_loss_{c}_celeris{sfx}",
                      round(float(lr[i]), 4), None))
-    print(f"  celeris loss by cause: " + "  ".join(
+    print("  celeris loss by cause: " + "  ".join(
         f"{c}={lr[i]:.4f}" for i, c in enumerate(telemetry.CAUSES)))
     return shares
 

@@ -43,8 +43,8 @@ if _REPO_ROOT not in sys.path:
 # check_regression.py separately skips the _wall_s/_us/kernel timing
 # keys, which are machine-dependent)
 _KEY_PREFIXES = ("engine_", "fig1e2e_", "fig2_", "fig3_", "fig4_", "fig5_",
-                 "fig6_", "fig7_", "fig8_", "fig9_", "kernel_", "smoke_",
-                 "timing_")
+                 "fig6_", "fig7_", "fig8_", "fig9_", "fig10_", "kernel_",
+                 "smoke_", "timing_")
 
 _DEFAULT_OUT = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_sim.json")
@@ -97,7 +97,7 @@ def run_full(quick: bool) -> _Sections:
                             fig4_cross_pod_tail, fig5_schedule_tail,
                             fig6_scale_schedule, fig7_fault_resilience,
                             fig8_serving_tail, fig9_tail_attribution,
-                            kernel_bench, roofline)
+                            fig10_priority_loss, kernel_bench, roofline)
     s = _Sections()
     s.add("table1", table1_qp_state.run)
     s.add("table2", table2_resources.run)
@@ -118,6 +118,9 @@ def run_full(quick: bool) -> _Sections:
           n_rounds=40 if quick else 60, scale_cell=not quick)
     s.add("fig8", fig8_serving_tail.run, n_rounds=120 if quick else 300)
     s.add("fig9", fig9_tail_attribution.run)
+    s.add("fig10", fig10_priority_loss.run,
+          n_rounds=25 if quick else 40,
+          n_nodes=(128, 256) if quick else fig10_priority_loss.NODES)
     s.add("kernels", kernel_bench.run)
     s.add("roofline", roofline.run)
     s.add("engine", engine_backend.run)
@@ -129,14 +132,16 @@ def run_smoke() -> _Sections:
     2-pod topology case + one ring-vs-hier schedule A/B + one
     window-policy (round-vs-phase) A/B + one stall fault-injection
     cell + one serving incast sweep + one recorded tail-attribution
-    cell + one jax-vs-numpy engine-backend throughput cell (its
-    speedup key is floor-gated at 1.0x), about a minute, exercising
-    the same code paths as the full run."""
+    cell + one priority-vs-arrival cut A/B (its high-priority loss
+    ratio is floor-gated at 1.0x) + one jax-vs-numpy engine-backend
+    throughput cell (its speedup key is floor-gated at 1.0x), about a
+    minute, exercising the same code paths as the full run."""
     from benchmarks import (engine_backend, fig2_tail_latency,
                             fig1_e2e_loss_tolerance, fig4_cross_pod_tail,
                             fig5_schedule_tail, fig6_scale_schedule,
                             fig7_fault_resilience, fig8_serving_tail,
-                            fig9_tail_attribution, kernel_bench)
+                            fig9_tail_attribution, fig10_priority_loss,
+                            kernel_bench)
     from repro.core.transport import SimParams, NetworkParams
     s = _Sections()
     s.add("fig2", fig2_tail_latency.run,
@@ -154,6 +159,8 @@ def run_smoke() -> _Sections:
     s.add("fig8", fig8_serving_tail.run, smoke=True, prefix="smoke_fig8")
     s.add("fig9", fig9_tail_attribution.run, smoke=True,
           prefix="smoke_fig9")
+    s.add("fig10", fig10_priority_loss.run, smoke=True,
+          prefix="smoke_fig10")
     s.add("kernels", lambda: [
         (f"smoke_{n}" if n.startswith("kernel_") else n, v, r)
         for n, v, r in kernel_bench.run()])

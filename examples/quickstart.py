@@ -5,7 +5,6 @@ steps on the synthetic Markov corpus, then greedy-generate.
 """
 import argparse
 
-import jax
 import jax.numpy as jnp
 
 import repro.configs as C

@@ -7,6 +7,8 @@
     PYTHONPATH=src python examples/transport_study.py --faults stall:1e-4
     PYTHONPATH=src python examples/transport_study.py --multi-pod \
         --schedule perrail --faults rail:0.3
+    PYTHONPATH=src python examples/transport_study.py --multi-pod \
+        --schedule hier --cut-order priority
 
 Tail attribution (the flight recorder, ``transport.telemetry``) —
 ``--trace OUT.json`` runs the engine with a ``TraceRecorder`` attached
@@ -66,6 +68,14 @@ def main():
                          "deadline per round, or the budget split across "
                          "the schedule's phase blocks by budget_frac "
                          "(params.WindowPolicy)")
+    ap.add_argument("--cut-order", choices=("arrival", "priority"),
+                    default="arrival",
+                    help="what a binding Celeris window truncates: "
+                         "arrival (trailing steps, bit-pinned default) "
+                         "or priority (lowest semantic class first — "
+                         "coded DCI shards before exact RS/AG shards; "
+                         "round times are identical either way, only "
+                         "WHERE the cut lands moves)")
     ap.add_argument("--nodes", type=int, default=128)
     ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
                     help="engine backend for the flat-engine and "
@@ -123,7 +133,7 @@ def main():
               f"{'rec rounds':>11s}")
         for d in DESIGNS:
             s = (eng.assemble(tr[d], args.seed, celeris_timeout_us=to,
-                              adaptive=False)
+                              adaptive=False, cut_order=args.cut_order)
                  if d == "celeris" else eng.assemble(tr[d], args.seed))
             print(f"{d:10s} {s.p50/1e3:8.2f} {s.p99/1e3:8.2f} "
                   f"{s.mean_loss*100:7.2f} "
@@ -136,12 +146,15 @@ def main():
         return
 
     if args.multi_pod:
-        print(f"schedule={args.schedule} window={args.window}"
+        prio = args.cut_order == "priority"
+        print(f"schedule={args.schedule} window={args.window} "
+              f"cut-order={args.cut_order}"
               + (f" faults={fault.tag}" if fault else "")
               + (" [flight recorder on]" if args.trace else ""))
         print(f"{'pods':>5s} {'oversub':>8s} {'p99 ms':>8s} "
               + "".join(f"{'loss% ' + t:>12s}" for t in TIERS)
-              + f" {'sched intra/cross %':>20s}")
+              + f" {'sched intra/cross %':>20s}"
+              + (f" {'loss% lo/hi cls':>16s}" if prio else ""))
         rec = None
         for npods in (2, 4, 8):
             for ov in (2.0, 8.0):
@@ -153,13 +166,18 @@ def main():
                 rec = TraceRecorder() if args.trace else None
                 cel = hier_protocol(p, n_rounds=args.rounds,
                                     seed=args.seed, window=args.window,
+                                    cut_order=args.cut_order,
                                     recorder=rec)["celeris"]
                 sched = coupling.split_schedule_from_round_stats(cel)
+                top = (np.asarray(cel.prio_pkts).size - 1
+                       if cel.prio_pkts is not None else 0)
                 print(f"{npods:5d} {ov:8.0f} {cel.p99/1e3:8.2f} "
                       + "".join(f"{cel.tier_loss(t)*100:12.3f}"
                                 for t in TIERS)
                       + f" {sched.intra.mean*100:9.2f}/"
-                        f"{sched.cross.mean*100:.2f}")
+                        f"{sched.cross.mean*100:.2f}"
+                      + (f" {cel.prio_loss(0)*100:8.3f}/"
+                         f"{cel.prio_loss(top)*100:.3f}" if prio else ""))
         if rec is not None:
             _dump_trace(rec, args.trace, mode="multi-pod",
                         cell="pods=8 oversub=8", schedule=args.schedule)

@@ -26,7 +26,6 @@ All transforms run through the Pallas FWHT kernel (MXU path on TPU);
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -268,7 +267,6 @@ def rademacher_nd(key: jax.Array, plan: "NdPlan") -> jax.Array:
 
 
 def plan_nd(shape, sharded_dim, n_rot: int = 4096) -> NdPlan:
-    ns = shape[sharded_dim] if sharded_dim is not None else 1
     m = 1
     for i, d in enumerate(shape):
         if i != sharded_dim:

@@ -11,10 +11,11 @@ from repro.core.transport.topology import (
 from repro.core.transport.schedule import (
     SCHEDULES, CollectiveSchedule, HierarchicalSchedule,
     PerRailHierarchicalSchedule, RingSchedule, SchedulePhase, SchedulePlan,
-    get_schedule, make_plan)
+    get_schedule, layer_priorities, make_plan, with_step_priorities)
 from repro.core.transport.coupling import (
     AxisSchedules, CollectiveMode, DropSchedule, EngineStragglerModel,
-    HierStragglerModel, LatencyTail, closed_form_schedule,
+    HierStragglerModel, LatencyTail, PrioritySchedules,
+    closed_form_schedule, priority_schedules_from_round_stats,
     schedule_from_engine, schedule_from_round_stats,
     split_schedule_from_engine, split_schedule_from_round_stats)
 from repro.core.transport.telemetry import (
@@ -32,9 +33,11 @@ __all__ = [
     "sweep", "hier_params", "hier_protocol",
     "SCHEDULES", "CollectiveSchedule", "HierarchicalSchedule",
     "PerRailHierarchicalSchedule", "RingSchedule", "SchedulePhase",
-    "SchedulePlan", "get_schedule", "make_plan",
+    "SchedulePlan", "get_schedule", "layer_priorities", "make_plan",
+    "with_step_priorities",
     "AxisSchedules", "CollectiveMode", "DropSchedule", "EngineStragglerModel",
-    "HierStragglerModel", "LatencyTail", "closed_form_schedule",
+    "HierStragglerModel", "LatencyTail", "PrioritySchedules",
+    "closed_form_schedule", "priority_schedules_from_round_stats",
     "schedule_from_engine", "schedule_from_round_stats",
     "split_schedule_from_engine", "split_schedule_from_round_stats",
     "CAUSES", "COMPONENTS", "ConservationError", "DesignRecord",

@@ -383,6 +383,87 @@ def split_schedule_from_engine(n_rounds: int, seed: int = 0, *,
 
 
 
+# ----------------------------------------------------------------------
+# Priority-class split schedules (semantic-aware window cuts)
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PrioritySchedules:
+    """Per-priority-class drop schedules from a prioritized engine run.
+
+    ``classes[c]`` is the :class:`DropSchedule` for priority class
+    ``c`` (class 0 = lowest = cut first; see
+    ``schedule.SchedulePhase.priority``), ``pkts[c]`` its offered
+    packets per round.  Under ``cut_order="priority"`` the low classes
+    soak up the window cut, so the trainer masks only the low-priority
+    shards: on the hierarchical plans class 0 *is* the Hadamard-coded
+    DCI exchange (``HierarchicalSchedule.PRIORITY``), i.e. ``low``
+    aligns with :class:`AxisSchedules`' ``cross`` axis and the exact
+    intra-pod shards in ``high`` ride untouched — the int8-low /
+    f32-high ``quantize_wire`` composition in the hierarchical train
+    step.  ``rates(step)`` returns the ``(n_classes,)`` vector, low
+    class first.
+    """
+    classes: tuple                      # of DropSchedule, index = class
+    pkts: np.ndarray                    # (n_classes,) offered pkts/round
+    source: str = ""
+
+    @property
+    def n_classes(self) -> int:
+        return len(self.classes)
+
+    @property
+    def low(self) -> DropSchedule:
+        """The cut-first class (coded / recoverable bytes)."""
+        return self.classes[0]
+
+    @property
+    def high(self) -> DropSchedule:
+        """The cut-last class (exact / high-value bytes)."""
+        return self.classes[-1]
+
+    def rates(self, step: int) -> np.ndarray:
+        return np.array([s.rate(step) for s in self.classes])
+
+    # schedule-walk interface shared with DropSchedule/AxisSchedules
+    rate = rates
+
+    @property
+    def mean(self) -> tuple:
+        return tuple(s.mean for s in self.classes)
+
+
+def priority_schedules_from_round_stats(stats: RoundStats, *,
+                                        source: str | None = None
+                                        ) -> PrioritySchedules:
+    """Engine per-class round statistics → per-priority-class schedules.
+
+    Requires the stats to carry per-class fractions
+    (``RoundStats.prio_recv_frac`` / ``prio_pkts`` — any
+    ``BatchedEngine.assemble`` of a plan-built trace, either
+    ``cut_order``); raises otherwise.  Classes with no offered packets
+    get all-zero schedules (nothing to drop).  Unlike the tier/axis
+    split, per-class drop is *semantic*: under ``cut_order="priority"``
+    the class-0 schedule absorbs the budget pressure and the top class
+    stays near zero, which is exactly what the trainer's masking
+    consumes (mask coded shards, keep exact shards).
+    """
+    if stats.prio_recv_frac is None or stats.prio_pkts is None:
+        raise ValueError(
+            "RoundStats lacks per-priority-class fractions — build it "
+            "through BatchedEngine.assemble on a plan-built trace "
+            "(stream-replay / reference paths don't track priority "
+            "classes)")
+    f = np.asarray(stats.prio_recv_frac, dtype=np.float64)
+    pk = np.asarray(stats.prio_pkts, dtype=np.float64)
+    tag = source or f"engine:{stats.design}"
+    classes = tuple(
+        DropSchedule(rates=(1.0 - f[:, c]) if pk[c] > 0
+                     else np.zeros(f.shape[0]),
+                     source=f"{tag}:prio{c}")
+        for c in range(f.shape[1]))
+    return PrioritySchedules(classes=classes, pkts=pk, source=tag)
+
 
 # ----------------------------------------------------------------------
 # Closed-form alternative (no engine run needed)

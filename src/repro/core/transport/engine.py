@@ -102,17 +102,24 @@ def _tier_frac(got: np.ndarray, tot: np.ndarray) -> np.ndarray:
     return np.where(tot > 0, got / np.maximum(tot, 1.0), 1.0)
 
 
-def _cut_block(nat_b, deliv_b, budget_us, groups):
+def _cut_block(nat_b, deliv_b, budget_us, groups, perm=None):
     """Apply one deadline to a contiguous run of steps.
 
     The one truncation rule every window policy shares: elapsed time is
     ``min(sum(nat), budget)``; packets delivered strictly inside the
     deadline count in full and the boundary step earns linear partial
     credit.  ``groups`` are (steps, G) per-group delivered arrays
-    (tiers, pods) that take the same cut.  Returns ``(elapsed, got,
-    group_gots)``.  The round window is this applied to the whole
-    round; the phase window applies it per phase block with the
-    plan's ``budget_frac`` split.
+    (tiers, pods, priority classes) that take the same cut.  Returns
+    ``(elapsed, got, group_gots)``.  The round window is this applied
+    to the whole round; the phase window applies it per phase block
+    with the plan's ``budget_frac`` split.
+
+    ``perm`` (``cut_order="priority"``) reallocates the *same* total
+    cut across steps in a static order — lowest priority class first,
+    late arrivals first within a class — so elapsed time and total
+    delivered packets are unchanged ("matched p99" by construction)
+    while the per-group accounting concentrates the loss in the
+    low-priority steps.  ``perm=None`` is arrival order, bit-pinned.
     """
     cum = np.cumsum(nat_b)
     total_t = cum[-1]
@@ -123,8 +130,45 @@ def _cut_block(nat_b, deliv_b, budget_us, groups):
     prev = float(cum[bidx - 1]) if bidx > 0 else 0.0
     part = (budget_us - prev) / max(nat_b[bidx], 1e-9)
     got = deliv_b[done].sum() + deliv_b[bidx] * part
+    if perm is not None:
+        survive = _priority_survive(deliv_b[None, :],
+                                    np.array([deliv_b.sum() - got]),
+                                    perm)[0]
+        return budget_us, got, [(g * survive[:, None]).sum(0)
+                                for g in groups]
     return budget_us, got, [(g * done[:, None]).sum(0) + g[bidx] * part
                             for g in groups]
+
+
+def _priority_survive(d, K, perm):
+    """(R, steps) per-step survive fraction cutting ``K`` packets in
+    ``perm`` order.
+
+    The priority cut's allocation rule: walk the steps in the static
+    ``perm`` order (lowest class first, late arrivals first within a
+    class) and remove delivered packets until the arrival cut's total
+    ``K[r]`` is gone; the boundary step takes a linear partial cut.
+    One clipped expression covers full / partial / no cut per step.
+    With uniform priorities ``perm`` is plain reverse-arrival order and
+    the allocation coincides with the arrival cut's.
+    """
+    d_perm = d[:, perm]
+    cum = np.cumsum(d_perm, axis=1)
+    prev = cum - d_perm
+    cutfrac = np.clip((K[:, None] - prev) / np.maximum(d_perm, 1e-30),
+                      0.0, 1.0)
+    survive = np.empty_like(d)
+    survive[:, perm] = 1.0 - cutfrac
+    return survive
+
+
+def _priority_perm(step_priority: np.ndarray) -> np.ndarray:
+    """Static cut order over a step block: priority class ascending
+    (lowest cut first), step index *descending* within a class (the
+    latest arrivals of a class go first, so uniform-priority blocks
+    reproduce the arrival cut's allocation exactly)."""
+    idx = np.arange(step_priority.size)
+    return np.lexsort((-idx, step_priority))
 
 
 @dataclasses.dataclass
@@ -146,6 +190,13 @@ class RoundStats:
     # per-pod axis-split coupling's inputs (None on flat topologies)
     pod_recv_frac: np.ndarray | None = None
     pod_pkts: np.ndarray | None = None
+    # per-priority-class delivered fractions (rounds, n_classes) plus
+    # the (n_classes,) offered packets per round per class — the
+    # semantic-priority accounting (schedule.SchedulePhase.priority)
+    # that the per-class coupling splits and fig10 read; None on traces
+    # without priority metadata
+    prio_recv_frac: np.ndarray | None = None
+    prio_pkts: np.ndarray | None = None
     # fault-injection accounting (None when the trace ran fault-free):
     # per round, the number of steps with >= 1 faulted flow and the
     # total faulted (flow, step) cells (params.FaultParams, faults.py)
@@ -177,6 +228,16 @@ class RoundStats:
         if self.tier_counts is not None and self.tier_counts[k] == 0:
             return 0.0
         return float(1.0 - self.tier_recv_frac[:, k].mean())
+
+    def prio_loss(self, cls: int) -> float:
+        """Mean loss in one semantic priority class (0 = lowest, cut
+        first under ``cut_order="priority"``); 0 when the class is
+        empty or the trace carried no priority metadata."""
+        if self.prio_recv_frac is None or cls >= self.prio_recv_frac.shape[1]:
+            return 0.0
+        if self.prio_pkts is not None and self.prio_pkts[cls] == 0:
+            return 0.0
+        return float(1.0 - self.prio_recv_frac[:, cls].mean())
 
     # -- fault-resilience metrics (fig7) -------------------------------
     @property
@@ -269,6 +330,12 @@ class StepTrace:
     phase_src: tuple | None = None              # per phase: sender nodes
     phase_tier_cols: tuple | None = None        # per phase: per-tier cols
     phase_pod_cols: tuple | None = None         # per phase: per-pod cols
+    # (steps_per_round,) semantic priority class per step
+    # (schedule.FlowPlan.step_priority) — assembly-time metadata only:
+    # cut_order="priority" reorders the window cut by it and the
+    # per-class delivered fractions scatter by it; the physics above
+    # never reads it
+    step_priority: np.ndarray | None = None
     # per-pod intra reductions (T, n_pods), multi-pod topologies only;
     # ``pod_pkts_round`` is (n_pods,) offered intra packets per round
     pod_deliv: np.ndarray | None = None
@@ -328,7 +395,8 @@ class BatchedEngine:
                     tier_cols=None, tier_counts=None, tier_pkts_round=None,
                     phase_of_step=None, phase_budget_frac=None,
                     phase_src=None, phase_tier_cols=None,
-                    phase_pod_cols=None, n_pods=0, pod_pkts_round=None):
+                    phase_pod_cols=None, n_pods=0, pod_pkts_round=None,
+                    step_priority=None):
         track = tier_counts is not None
         pods = n_pods > 1
         out: Dict[str, StepTrace] = {}
@@ -349,6 +417,7 @@ class BatchedEngine:
                 phase_budget_frac=phase_budget_frac,
                 phase_src=phase_src, phase_tier_cols=phase_tier_cols,
                 phase_pod_cols=phase_pod_cols,
+                step_priority=step_priority,
                 pod_deliv=np.zeros((T, n_pods)) if pods else None,
                 pod_total=np.zeros((T, n_pods)) if pods else None,
                 pod_pkts_round=pod_pkts_round if pods else None)
@@ -568,7 +637,8 @@ class BatchedEngine:
                                phase_of_step=plan.phase_of_step,
                                phase_budget_frac=plan.budget_fracs(),
                                phase_src=(plan.phases[0].src,),
-                               phase_tier_cols=(g["hier"].tier_cols,))
+                               phase_tier_cols=(g["hier"].tier_cols,),
+                               step_priority=plan.step_priority())
         if need_clean:
             qd_clean = network.queue_delay_us(net, occ_clean32)
             avail_clean = network.avail_bandwidth(net, occ_clean32)
@@ -737,7 +807,8 @@ class BatchedEngine:
             phase_pod_cols=tuple(ph_pod_cols) if hier else None,
             n_pods=p.topo.n_pods if hier else 0,
             pod_pkts_round=(plan.pod_pkts_round(net, p.topo, hgs)
-                            if hier else None))
+                            if hier else None),
+            step_priority=plan.step_priority())
         for t0 in range(0, T, block_steps):
             tb = min(block_steps, T - t0)   # whole rounds: steps | tb
             u = fabric_gen.random((tb, network._ADVANCE_DRAWS, n_tors))
@@ -868,7 +939,8 @@ class BatchedEngine:
     def assemble(self, trace: StepTrace, seed: int, *,
                  celeris_timeout_us: float | None = None,
                  adaptive: bool = True,
-                 window: "str | WindowPolicy" = "round") -> RoundStats:
+                 window: "str | WindowPolicy" = "round",
+                 cut_order: str = "arrival") -> RoundStats:
         """Apply round structure (and, for Celeris, bounded windows) to a
         step trace.  Sequential only across rounds, and only when the
         adaptive controller is on.
@@ -883,8 +955,33 @@ class BatchedEngine:
         three policies see the identical ``[1.0]`` split, so "phase"
         degenerates to "round" and "step" to the pre-policy per-step
         window, bit-for-bit.
+
+        ``cut_order`` decides *which* packets a binding budget cuts:
+        ``"arrival"`` (bit-pinned default) truncates the trailing
+        steps; ``"priority"`` reallocates the same total cut by
+        semantic class (``schedule.SchedulePhase.priority``) — lowest
+        class first, high classes only after the low ones are
+        exhausted.  Elapsed times and total delivered fractions are
+        identical between the two orders (matched p99 by
+        construction); only the per-tier / per-pod / per-class
+        accounting moves, which is what the coupling layer and fig10
+        read.
         """
         window = WindowPolicy.parse(window).kind
+        if cut_order not in ("arrival", "priority"):
+            raise ValueError(f"cut_order must be 'arrival' or "
+                             f"'priority', got {cut_order!r}")
+        if cut_order == "priority":
+            if trace.step_priority is None:
+                raise ValueError(
+                    "cut_order='priority' needs a trace with "
+                    "step_priority metadata (engine-built traces carry "
+                    "it; traces assembled from raw arrays do not)")
+            if window == "step":
+                raise ValueError(
+                    "cut_order='priority' applies to round/phase "
+                    "budgets; the step window binds per step, leaving "
+                    "no cut to reorder")
         steps = trace.steps_per_round
         R = trace.nat_us.shape[0] // steps
         nat = trace.nat_us.reshape(R, steps)
@@ -892,8 +989,9 @@ class BatchedEngine:
         total = trace.total.reshape(R, steps)
         tot_sum = np.maximum(total.sum(axis=1), 1.0)
 
-        # accounting groups riding the window cut: tiers, then pods
-        t_deliv = t_total = p_deliv = p_total = None
+        # accounting groups riding the window cut: tiers, then pods,
+        # then priority classes
+        t_deliv = t_total = p_deliv = p_total = pr_deliv = None
         groups = []             # (R, steps, G) delivered/total pairs
         if trace.tier_deliv is not None:
             t_deliv = trace.tier_deliv.reshape(R, steps, -1)
@@ -903,9 +1001,22 @@ class BatchedEngine:
             p_deliv = trace.pod_deliv.reshape(R, steps, -1)
             p_total = trace.pod_total.reshape(R, steps, -1)
             groups.append((p_deliv, p_total))
+        prio_pkts = None
+        if trace.step_priority is not None:
+            # per-class accounting: scatter the scalar per-step sums by
+            # the static step→class map (no physics involved — the
+            # class split of a step's delivered packets is the step's
+            # own split, like the tier columns above)
+            cls = np.asarray(trace.step_priority, dtype=int)
+            onehot = cls[:, None] == np.arange(cls.max() + 1)[None, :]
+            pr_deliv = deliv[:, :, None] * onehot
+            pr_total = total[:, :, None] * onehot
+            groups.append((pr_deliv, pr_total))
+            prio_pkts = pr_total.sum(axis=1)[0]
         tier_kw = dict(tier_counts=trace.tier_counts,
                        tier_pkts=trace.tier_pkts_round,
-                       pod_pkts=trace.pod_pkts_round)
+                       pod_pkts=trace.pod_pkts_round,
+                       prio_pkts=prio_pkts)
         if trace.fault_flows is not None:
             # fault exposure per round: steps with >= 1 faulted flow,
             # and total faulted (flow, step) cells — design-independent,
@@ -918,9 +1029,11 @@ class BatchedEngine:
             gf = list(group_fracs)
             tf = gf.pop(0) if t_deliv is not None else None
             pf = gf.pop(0) if p_deliv is not None else None
+            prf = gf.pop(0) if pr_deliv is not None else None
             st = RoundStats(times_us=times, recv_frac=fracs,
                             design=design, tier_recv_frac=tf,
-                            pod_recv_frac=pf, **tier_kw)
+                            pod_recv_frac=pf, prio_recv_frac=prf,
+                            **tier_kw)
             if self.recorder is not None:
                 # window-cut attribution: the gap between the trace's
                 # post-fault delivery and what survived the window
@@ -1004,12 +1117,30 @@ class BatchedEngine:
                             got_g[j] += got_node[
                                 np.ix_(rows, _node_cols(k, cols))].sum()
                 gots.append(got_g)
+            if pr_deliv is not None:
+                # per-class split of the per-step cut (the step window
+                # binds per step, so each step's survivors land whole
+                # in that step's class)
+                got_pr = np.zeros(pr_deliv.shape[2])
+                np.add.at(got_pr, np.asarray(trace.step_priority, int),
+                          got_node.sum(axis=1))
+                gots.append(got_pr)
             return time_r, got_node.sum(), gots
 
         init_to = (celeris_timeout_us or 50_000.0) / 1e6
         cfg = timeout_mod.TimeoutConfig(
             init_timeout=init_to, min_timeout=init_to * 0.25,
             max_timeout=init_to * 8.0, alpha=0.25)
+
+        # static cut-order permutations (cut_order="priority"): one per
+        # budget block — the whole round for the round window, each
+        # phase block for the phase window (a phase of uniform class
+        # degenerates to arrival order there)
+        round_perm = ph_perms = None
+        if cut_order == "priority":
+            sp = np.asarray(trace.step_priority, dtype=int)
+            round_perm = _priority_perm(sp)
+            ph_perms = [_priority_perm(sp[rows]) for rows in ph_rows]
 
         if not adaptive and window in ("round", "phase"):
             if self.backend == "jax":
@@ -1020,16 +1151,21 @@ class BatchedEngine:
                 jax_rows, jax_frac = (
                     (ph_rows, ph_frac) if window == "phase"
                     else ([np.arange(steps)], np.ones(1)))
+                jax_perms = None
+                if cut_order == "priority":
+                    jax_perms = (ph_perms if window == "phase"
+                                 else [round_perm])
                 return _pack(*engine_jax.assemble_window_fixed(
                     nat, deliv, tot_sum, init_to * 1e6, groups,
-                    jax_rows, jax_frac), design="celeris")
+                    jax_rows, jax_frac, perms=jax_perms),
+                    design="celeris")
             if window == "round":
                 return _pack(*self._assemble_round_window_fixed(
-                    nat, deliv, tot_sum, init_to * 1e6, groups),
-                    design="celeris")
+                    nat, deliv, tot_sum, init_to * 1e6, groups,
+                    perm=round_perm), design="celeris")
             return _pack(*self._assemble_phase_window_fixed(
                 nat, deliv, tot_sum, init_to * 1e6, groups, ph_rows,
-                ph_frac), design="celeris")
+                ph_frac, perms=ph_perms), design="celeris")
 
         rng = np.random.default_rng([seed, _STREAM_WINDOW])
         n = self.p.net.n_nodes
@@ -1052,17 +1188,20 @@ class BatchedEngine:
                     t_k, got_k, gots_k = _cut_block(
                         nat[r, rows], deliv[r, rows],
                         budget_us * ph_frac[k],
-                        [gd[r, rows] for gd, _ in groups])
+                        [gd[r, rows] for gd, _ in groups],
+                        perm=None if ph_perms is None else ph_perms[k])
                     t_sum += t_k
                     got += got_k
                     for gg, gk in zip(gots, gots_k):
                         gg += gk
                 times[r] = t_sum
                 fracs[r] = got / tot_sum[r]
-            else:   # "round" (and "phase" on a single-phase plan)
+            else:   # "round" (and "phase" on a single-phase plan,
+                    # where the one phase block is the whole round and
+                    # the perms coincide)
                 times[r], got, gots = _cut_block(
                     nat[r], deliv[r], budget_us,
-                    [gd[r] for gd, _ in groups])
+                    [gd[r] for gd, _ in groups], perm=round_perm)
                 fracs[r] = got / tot_sum[r]
             for i, gg in enumerate(gots):
                 g_fracs[i][r] = _tier_frac(gg, g_tot[i][r])
@@ -1077,9 +1216,14 @@ class BatchedEngine:
 
     @staticmethod
     def _assemble_round_window_fixed(nat, deliv, tot_sum, budget_us,
-                                     groups=()):
+                                     groups=(), perm=None):
         """Fixed bounded round window, all rounds at once (paper
-        protocol).  Returns ``(times, fracs, group_fracs)``."""
+        protocol).  Returns ``(times, fracs, group_fracs)``.
+
+        ``perm`` (``cut_order="priority"``) reallocates each over-budget
+        round's cut across steps in the static priority order — times
+        and total delivered fractions are untouched, only the group
+        accounting moves (see :func:`_priority_survive`)."""
         cum = np.cumsum(nat, axis=1)
         total_t = cum[:, -1]
         over = total_t > budget_us
@@ -1096,6 +1240,9 @@ class BatchedEngine:
         got = ((deliv * done).sum(axis=1)
                + np.take_along_axis(deliv, bidx[:, None], axis=1)[:, 0] * part)
         fracs = np.where(over, got / tot_sum, deliv.sum(axis=1) / tot_sum)
+        if perm is not None:
+            K = np.where(over, deliv.sum(axis=1) - got, 0.0)
+            survive = _priority_survive(deliv, K, perm)
         g_fracs = []
         for g_deliv, g_total in groups:
             # same window cut, applied per group column (the truncated
@@ -1103,8 +1250,11 @@ class BatchedEngine:
             # column's share of that step's delivered packets —
             # identical math to the scalar path)
             R = g_deliv.shape[0]
-            got_g = ((g_deliv * done[:, :, None]).sum(axis=1)
-                     + g_deliv[np.arange(R), bidx] * part[:, None])
+            if perm is not None:
+                got_g = (g_deliv * survive[:, :, None]).sum(axis=1)
+            else:
+                got_g = ((g_deliv * done[:, :, None]).sum(axis=1)
+                         + g_deliv[np.arange(R), bidx] * part[:, None])
             full_g = g_deliv.sum(axis=1)
             g_fracs.append(_tier_frac(
                 np.where(over[:, None], got_g, full_g),
@@ -1113,14 +1263,20 @@ class BatchedEngine:
 
     @staticmethod
     def _assemble_phase_window_fixed(nat, deliv, tot_sum, budget_us,
-                                     groups, ph_rows, ph_frac):
+                                     groups, ph_rows, ph_frac,
+                                     perms=None):
         """Fixed per-phase windows, all rounds at once: every phase
         block takes its ``budget_frac`` share of the round budget and
         is truncated at its own deadline (the Celeris adaptive-timeout
         idea applied per fabric tier — DCI blocks may run long without
         eating the intra-pod phases' slack, and an intra-pod straggler
         cannot push the DCI deadline out).  Single-phase plans reduce
-        to the round window exactly (``ph_frac == [1.0]``)."""
+        to the round window exactly (``ph_frac == [1.0]``).
+
+        ``perms`` (``cut_order="priority"``; one static permutation per
+        phase block) reallocates each block's cut in priority order —
+        within a phase the classes are usually uniform, making the
+        per-phase priority cut coincide with arrival there."""
         R = nat.shape[0]
         times = np.zeros(R)
         got = np.zeros(R)
@@ -1146,10 +1302,17 @@ class BatchedEngine:
                      + np.take_along_axis(d_k, bidx[:, None],
                                           axis=1)[:, 0] * part)
             got += np.where(over, got_k, d_k.sum(axis=1))
+            survive = None
+            if perms is not None:
+                K = np.where(over, d_k.sum(axis=1) - got_k, 0.0)
+                survive = _priority_survive(d_k, K, perms[k])
             for i, (gd, _) in enumerate(groups):
                 gd_k = gd[:, rows]
-                cut = ((gd_k * done[:, :, None]).sum(axis=1)
-                       + gd_k[np.arange(R), bidx] * part[:, None])
+                if survive is not None:
+                    cut = (gd_k * survive[:, :, None]).sum(axis=1)
+                else:
+                    cut = ((gd_k * done[:, :, None]).sum(axis=1)
+                           + gd_k[np.arange(R), bidx] * part[:, None])
                 got_g[i] += np.where(over[:, None], cut,
                                      gd_k.sum(axis=1))
         fracs = got / tot_sum
@@ -1161,6 +1324,7 @@ class BatchedEngine:
     def run(self, design: str, n_rounds: int = 400, *,
             celeris_timeout_us: float | None = None,
             adaptive: bool = True, window: "str | WindowPolicy" = "round",
+            cut_order: str = "arrival",
             seed: int | None = None, legacy_streams: bool = True
             ) -> RoundStats:
         """Simulate ``n_rounds`` AllReduce rounds for one NIC design."""
@@ -1193,7 +1357,8 @@ class BatchedEngine:
                          legacy_streams=legacy_streams, per_node_for=keep)
         return self.assemble(tr[design], seed,
                              celeris_timeout_us=celeris_timeout_us,
-                             adaptive=adaptive, window=window)
+                             adaptive=adaptive, window=window,
+                             cut_order=cut_order)
 
     # ------------------------------------------------------------------
     def paper_protocol(self, n_rounds: int = 400, seed: int = 0, *,

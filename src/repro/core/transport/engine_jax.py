@@ -177,7 +177,6 @@ def _phase_statics(p: SimParams, plan, hgs, ph_pkts, ph_fan, ph_inc):
 def _make_core(p: SimParams, plan, hgs, design_list, n, steps,
                ph_pkts, ph_steps, ph_fan, ph_inc, identity_plan):
     net, rel, dq = p.net, p.rel, p.dcqcn
-    hier = p.topo.hierarchical
     has_faults = p.fault.active
     use_rate_scale = p.fault.straggler_frac > 0
     single = plan.single_phase
@@ -467,7 +466,8 @@ def traces_batched(eng, design_list, n_rounds: int, seeds, *,
         phase_pod_cols=tuple(ph_pod_cols) if hier else None,
         n_pods=p.topo.n_pods if hier else 0,
         pod_pkts_round=(plan.pod_pkts_round(net, p.topo, hgs)
-                        if hier else None)) for _ in seeds]
+                        if hier else None),
+        step_priority=plan.step_priority()) for _ in seeds]
     fault_flows = ([np.zeros(T) for _ in seeds] if has_faults else None)
 
     def host_block(st: _SeedStreams, t0: int, tb: int, si: int):
@@ -625,9 +625,15 @@ def _scatter_block(out, res, si, t0, plan, ph_steps, ph_pkts, hgs,
 # Jitted fixed bounded-window assembly
 # ----------------------------------------------------------------------
 
-def _make_window(ph_rows, ph_frac, n_groups):
+def _make_window(ph_rows, ph_frac, n_groups, perms=None):
     """Jitted twin of ``BatchedEngine._assemble_phase_window_fixed``
-    (which the round window is the single-phase case of)."""
+    (which the round window is the single-phase case of).
+
+    ``perms`` (``cut_order="priority"``; one static permutation per
+    phase block) mirrors ``engine._priority_survive``: each over-budget
+    block's cut is reallocated across steps in the static priority
+    order, leaving times and total delivered packets untouched."""
+    invs = ([np.argsort(p) for p in perms] if perms is not None else None)
 
     def fn(nat, deliv, budget_us, group_delivs):
         R = nat.shape[0]
@@ -656,10 +662,22 @@ def _make_window(ph_rows, ph_frac, n_groups):
                      + jnp.take_along_axis(d_k, bidx[:, None],
                                            axis=1)[:, 0] * part)
             got = got + jnp.where(over, got_k, d_k.sum(axis=1))
+            survive = None
+            if perms is not None:
+                K = jnp.where(over, d_k.sum(axis=1) - got_k, 0.0)
+                d_perm = d_k[:, perms[k]]
+                cum_d = jnp.cumsum(d_perm, axis=1)
+                cutfrac = jnp.clip(
+                    (K[:, None] - (cum_d - d_perm))
+                    / jnp.maximum(d_perm, 1e-30), 0.0, 1.0)
+                survive = (1.0 - cutfrac)[:, invs[k]]
             for i in range(n_groups):
                 gd_k = group_delivs[i][:, rows]
-                cut = ((gd_k * done[:, :, None]).sum(axis=1)
-                       + gd_k[jnp.arange(R), bidx] * part[:, None])
+                if survive is not None:
+                    cut = (gd_k * survive[:, :, None]).sum(axis=1)
+                else:
+                    cut = ((gd_k * done[:, :, None]).sum(axis=1)
+                           + gd_k[jnp.arange(R), bidx] * part[:, None])
                 got_g[i] = got_g[i] + jnp.where(over[:, None], cut,
                                                 gd_k.sum(axis=1))
         return times, got, got_g
@@ -668,21 +686,25 @@ def _make_window(ph_rows, ph_frac, n_groups):
 
 
 def assemble_window_fixed(nat, deliv, tot_sum, budget_us, groups,
-                          ph_rows, ph_frac):
+                          ph_rows, ph_frac, perms=None):
     """Fixed round/phase bounded window on (R, steps) arrays, jitted.
 
     Same signature contract as the numpy fixed-window helpers: returns
     ``(times, fracs, group_fracs)``.  Pass a single phase covering the
-    round for the round window.
+    round for the round window; ``perms`` selects the priority cut
+    order (one static permutation per phase block, None = arrival).
     """
     _require_jax()
     ph_rows = [np.asarray(r) for r in ph_rows]
     ph_frac = np.asarray(ph_frac, dtype=np.float64)
+    if perms is not None:
+        perms = [np.asarray(p) for p in perms]
     key = (tuple(r.tobytes() for r in ph_rows), ph_frac.tobytes(),
-           len(groups), nat.shape[1])
+           len(groups), nat.shape[1],
+           None if perms is None else tuple(p.tobytes() for p in perms))
     fn = _WINDOW_CACHE.get(key)
     if fn is None:
-        fn = _make_window(ph_rows, ph_frac, len(groups))
+        fn = _make_window(ph_rows, ph_frac, len(groups), perms=perms)
         _WINDOW_CACHE[key] = fn
     with enable_x64():
         times, got, got_g = jax.device_get(

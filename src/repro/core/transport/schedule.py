@@ -100,6 +100,16 @@ class SchedulePhase:
     the nominal serialization share ``n_steps * payload_bytes``;
     schedules set explicit weights where the fabric is slower than the
     payload suggests (the DCI phases weight by oversubscription).
+
+    ``priority`` is the phase's semantic priority class (higher = more
+    valuable bytes).  It never changes the physics — the engine times
+    flows identically regardless of class — but the window policy's
+    ``cut_order="priority"`` mode truncates the lowest class first when
+    a budget binds, and the per-class delivered fractions feed the
+    coupling layer (``RoundStats.prio_recv_frac``).  Class 0 is the
+    default ("cut me first"); the hierarchical schedules put the
+    Hadamard-coded DCI shards there and the exact intra-pod shards in
+    class 1.
     """
     name: str
     src: np.ndarray            # (n_flows,) sender node per flow
@@ -107,6 +117,7 @@ class SchedulePhase:
     n_steps: int               # steps of this phase per round
     payload_bytes: int         # bytes per flow per step
     budget_frac: float | None = None   # window-budget weight (un-normalized)
+    priority: int = 0          # semantic class (higher = cut later)
 
     def n_pkts(self, net: NetworkParams) -> int:
         """Packets per flow per step (payload split at the MTU, >= 1)."""
@@ -146,6 +157,9 @@ class FlowPlan:
     phases: tuple              # of SchedulePhase, in execution order
     steps_per_round: int
     phase_of_step: np.ndarray  # (steps_per_round,) phase index per step
+    # Optional per-step priority override (serve plans bucket steps
+    # inside one phase); None derives classes from the phases.
+    priority_of_step: np.ndarray | None = None
 
     @property
     def single_phase(self) -> bool:
@@ -227,6 +241,40 @@ class FlowPlan:
         w = np.array([ph.budget_weight for ph in self.phases])
         return w / w.sum()
 
+    def step_priority(self) -> np.ndarray:
+        """(steps_per_round,) semantic priority class per step.
+
+        Derived from the phases' ``priority`` fields unless the plan
+        carries a per-step override (``priority_of_step`` — serve plans
+        bucket steps inside a single phase).  Pure assembly-time
+        metadata: the engine's ``cut_order="priority"`` window mode and
+        the per-class delivered-fraction accounting read it; the
+        physics never does.
+        """
+        if self.priority_of_step is not None:
+            return np.asarray(self.priority_of_step, dtype=int)
+        return np.repeat(np.array([ph.priority for ph in self.phases],
+                                  dtype=int),
+                         [ph.n_steps for ph in self.phases])
+
+    def n_priority_classes(self) -> int:
+        """Number of priority classes (``max class + 1``; >= 1)."""
+        return int(self.step_priority().max()) + 1
+
+    def prio_pkts_round(self, net: NetworkParams) -> np.ndarray:
+        """(n_classes,) offered packets per round per priority class —
+        the per-class analogue of :meth:`tier_pkts_round`, weighting the
+        per-class drop schedules (``coupling``)."""
+        cls = self.step_priority()
+        out = np.zeros(self.n_priority_classes())
+        for ph, rows in zip(self.phases,
+                            np.split(np.arange(self.steps_per_round),
+                                     np.cumsum([ph.n_steps for ph
+                                                in self.phases])[:-1])):
+            per_step = ph.src.size * ph.n_pkts(net)
+            np.add.at(out, cls[rows], float(per_step))
+        return out
+
     def bytes_per_round(self) -> int:
         """Total bytes offered to the fabric per round (all flows, all
         steps) — the payload-conservation invariant tests pin."""
@@ -276,10 +324,58 @@ def flow_plan(name: str, phases) -> FlowPlan:
         if ph.payload_bytes < 1:
             raise ValueError(
                 f"phase {ph.name!r}: payload_bytes must be >= 1")
+        if ph.priority < 0:
+            raise ValueError(
+                f"phase {ph.name!r}: priority class must be >= 0")
     plan = _mk_plan(name, phases)
     if not plan.phases:
         raise ValueError("flow plan has no non-empty phases")
     return plan
+
+
+def with_step_priorities(plan: FlowPlan, priority_of_step) -> FlowPlan:
+    """Return ``plan`` with a validated per-step priority override.
+
+    Serve plans bucket steps *inside* one phase (e.g. head-of-cache KV
+    blocks above tail blocks), which phase-level ``priority`` fields
+    can't express.  The override is pure assembly-time metadata —
+    engine timing and the plan's phases are untouched, so bit-pinned
+    stats cannot move.
+    """
+    cls = np.asarray(priority_of_step, dtype=int)
+    if cls.shape != (plan.steps_per_round,):
+        raise ValueError(
+            f"priority_of_step must have shape ({plan.steps_per_round},), "
+            f"got {cls.shape}")
+    if (cls < 0).any():
+        raise ValueError("priority classes must be >= 0")
+    return dataclasses.replace(plan, priority_of_step=cls)
+
+
+def layer_priorities(plan: FlowPlan, top_frac: float = 0.5) -> np.ndarray:
+    """Layer-depth priority classes for a hierarchical training plan.
+
+    Training semantics on top of the phase classes: the trailing
+    ``top_frac`` of the final all-gather phase carries the early-layer
+    exact shards the *next* forward pass consumes first (the
+    priority-based parameter-propagation observation), so those steps
+    are promoted to a new top class above every phase priority.  The
+    result is e.g. ``dci=0 < rs/early-ag=1 < late-ag=2``: the bounded
+    window then cuts coded DCI bytes first, early-ag exact shards
+    next, and the forward-critical shards last — the exact inverse of
+    the arrival cut, which truncates the round from the end and kills
+    the forward-critical shards *first*.  Plans without an all-gather
+    phase (flat ring, serve) come back unchanged.  Feed the result to
+    :func:`with_step_priorities`.
+    """
+    cls = plan.step_priority().copy()
+    pos = np.asarray(plan.phase_of_step)
+    is_ag = np.array([plan.phases[k].name.startswith("ag") for k in pos])
+    ag_steps = np.where(is_ag)[0]
+    n_top = int(round(ag_steps.size * top_frac))
+    if n_top:
+        cls[ag_steps[ag_steps.size - n_top:]] = cls.max() + 1
+    return cls
 
 
 class CollectiveSchedule:
@@ -336,6 +432,14 @@ class HierarchicalSchedule(CollectiveSchedule):
     # asserts against this so schedule and collective mode can't drift
     # apart silently.
     PHASE_ORDER = ("rs", "dci", "ag")
+    # Semantic priority classes: the DCI shards ride the Hadamard code
+    # (losses are recoverable — "coded/low-value bytes"), the intra-pod
+    # rs/ag shards are exact.  cut_order="priority" therefore truncates
+    # DCI bytes first when a window budget binds; the trainer's
+    # HIERARCHICAL sync asserts the coded phase is the lowest class
+    # (train_step.make_train_step), mirroring that it masks only
+    # cross-pod shards.
+    PRIORITY = {"rs": 1, "dci": 0, "ag": 1}
 
     def _dci_phase(self, net, topo, work, m: int) -> SchedulePhase:
         """The leader exchange: one flow per pod, ``M/n_pods`` shards."""
@@ -372,9 +476,12 @@ class HierarchicalSchedule(CollectiveSchedule):
                             extra_rtt_us=topo.dci_rtt_us / 2,
                             slowdown=_mean_oversub(topo))
         phases = (
-            dataclasses.replace(rs, budget_frac=intra_w),
-            dataclasses.replace(dci, budget_frac=dci_w),
-            dataclasses.replace(rs, name="ag", budget_frac=intra_w),
+            dataclasses.replace(rs, budget_frac=intra_w,
+                                priority=self.PRIORITY["rs"]),
+            dataclasses.replace(dci, budget_frac=dci_w,
+                                priority=self.PRIORITY["dci"]),
+            dataclasses.replace(rs, name="ag", budget_frac=intra_w,
+                                priority=self.PRIORITY["ag"]),
         )
         assert tuple(ph.name for ph in phases) == self.PHASE_ORDER
         return _mk_plan(self.name, phases)

@@ -110,6 +110,8 @@ class DesignRecord:
     elapsed_us: np.ndarray | None = None     # (R,) stats.times_us
     windowed_pkts: np.ndarray | None = None  # (R, n_tiers) survive window
     window_cut_pkts: np.ndarray | None = None  # (R, n_tiers)
+    prio_offered_pkts: np.ndarray | None = None    # (R, n_classes)
+    prio_window_cut_pkts: np.ndarray | None = None  # (R, n_classes)
     stats: "object | None" = None            # the assembled RoundStats
 
     # -- derived views -------------------------------------------------
@@ -329,6 +331,23 @@ class TraceRecorder:
             windowed = np.asarray(stats.tier_recv_frac, np.float64) * tot
             rec.windowed_pkts = windowed
             rec.window_cut_pkts = np.maximum(full - windowed, 0.0)
+        if (trace.step_priority is not None
+                and stats.prio_recv_frac is not None):
+            # same attribution regrouped by priority class: under
+            # cut_order="priority" the cut concentrates in class 0, and
+            # the per-class columns sum to the per-tier cut exactly
+            # (audit_round pins the recombination)
+            cls = np.asarray(trace.step_priority, dtype=int)
+            C = np.asarray(stats.prio_recv_frac).shape[1]
+            onehot = (cls[:, None] == np.arange(C)[None, :])
+            d = trace.deliv.reshape(R, steps)
+            t = trace.total.reshape(R, steps)
+            full_c = (d[:, :, None] * onehot[None, :, :]).sum(axis=1)
+            tot_c = (t[:, :, None] * onehot[None, :, :]).sum(axis=1)
+            windowed_c = np.asarray(stats.prio_recv_frac,
+                                    np.float64) * tot_c
+            rec.prio_offered_pkts = tot_c
+            rec.prio_window_cut_pkts = np.maximum(full_c - windowed_c, 0.0)
 
     # -- reading -------------------------------------------------------
     def record(self, design: str) -> DesignRecord:
@@ -444,6 +463,17 @@ def audit_round(stats, record: DesignRecord | None = None, *,
     _ck(err < max(pkt_rtol, 1e-12),
         f"pre-window delivered + wire/fault losses do not conserve "
         f"(rel err {err:.2e})")
+    if (record.prio_window_cut_pkts is not None
+            and record.window_cut_pkts is not None):
+        # the priority-class regrouping must account for the same cut
+        # bytes as the tier grouping (both slice one survive vector)
+        err = float(np.abs(record.prio_window_cut_pkts.sum(axis=1)
+                           - record.window_cut_pkts.sum(axis=1)).max()
+                    / scale)
+        out["prio_cut_recomb_rel_err"] = err
+        _ck(err < 1e-9,
+            f"per-priority-class window cuts do not recombine to the "
+            f"per-tier window cuts (rel err {err:.2e})")
     if record.stats is not None and record.stats.tier_pkts is not None:
         tp = np.asarray(record.stats.tier_pkts, np.float64)
         err = float(np.abs(offered - tp[None, :]).max() / scale)

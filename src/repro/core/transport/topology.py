@@ -289,7 +289,7 @@ def hier_params(n_pods: int, *, base: SimParams | None = None,
 
 def hier_protocol(params: SimParams, n_rounds: int = 200, seed: int = 0, *,
                   timeout_scale: float = 1.0, window: str = "round",
-                  recorder=None):
+                  cut_order: str = "arrival", recorder=None):
     """Fig.-4 protocol on the hierarchical fabric.
 
     Same window rule as the flat paper protocol — the RoCE baseline on
@@ -299,9 +299,13 @@ def hier_protocol(params: SimParams, n_rounds: int = 200, seed: int = 0, *,
     selects the Celeris budget policy ("round" | "phase", see
     ``params.WindowPolicy``) — "phase" splits the same budget across
     the collective schedule's phase blocks by their ``budget_frac``.
-    Returns ``{design: RoundStats}`` for roce + celeris.  Pass a
-    ``telemetry.TraceRecorder`` as ``recorder`` to capture the tail /
-    loss attribution of both designs (a pure overlay; stats unchanged).
+    ``cut_order`` selects what a binding budget truncates ("arrival" |
+    "priority" — the latter cuts the schedule's lowest semantic class
+    first; times are identical either way, see
+    ``BatchedEngine.assemble``).  Returns ``{design: RoundStats}`` for
+    roce + celeris.  Pass a ``telemetry.TraceRecorder`` as ``recorder``
+    to capture the tail / loss attribution of both designs (a pure
+    overlay; stats unchanged).
     """
     from repro.core.transport.engine import BatchedEngine
 
@@ -312,5 +316,6 @@ def hier_protocol(params: SimParams, n_rounds: int = 200, seed: int = 0, *,
     to = float((np.percentile(base.times_us, 50) + base.times_us.std())
                * timeout_scale)
     cel = eng.assemble(tr["celeris"], seed, celeris_timeout_us=to,
-                       adaptive=False, window=window)
+                       adaptive=False, window=window,
+                       cut_order=cut_order)
     return {"roce": base, "celeris": cel}

@@ -11,7 +11,6 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-import repro.configs as C
 from repro import sharding as shd
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import model as M

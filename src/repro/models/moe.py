@@ -27,7 +27,6 @@ experts are unroutable: router logits forced to -inf).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional
 
 import jax

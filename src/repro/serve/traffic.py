@@ -100,13 +100,24 @@ def kv_flow_plan(tp: ServeTrafficParams) -> schedule_mod.FlowPlan:
     one ``kv_block_bytes`` block each.  With ``n_prefill > n_decode``
     every decode port takes ``~fan_in`` concurrent senders — the incast
     case of :func:`repro.core.transport.schedule.flow_plan`.
+
+    Steps carry per-step priorities (pure assemble-time metadata — the
+    physics trace and the default ``cut_order="arrival"`` stats are
+    unchanged): the head half of each request's KV blocks is class 1
+    (the prompt prefix decode needs first — losing it stalls the first
+    token) and the tail half class 0 (late-context blocks the coded KV
+    path recovers most cheaply).  Under ``cut_order="priority"`` the
+    bounded window then cuts tail blocks first.
     """
     src = np.arange(tp.n_prefill)
     dst = tp.n_prefill + (src % tp.n_decode)
     kv = schedule_mod.SchedulePhase(
         name="kv", src=src, dst=dst, n_steps=tp.steps_per_round,
         payload_bytes=tp.kv_block_bytes)
-    return schedule_mod.flow_plan("kv_incast", (kv,))
+    plan = schedule_mod.flow_plan("kv_incast", (kv,))
+    head = (np.arange(tp.steps_per_round)
+            < (tp.steps_per_round + 1) // 2).astype(int)
+    return schedule_mod.with_step_priorities(plan, head)
 
 
 def serve_net_params(tp: ServeTrafficParams, base: NetworkParams | None = None

@@ -266,7 +266,6 @@ def make_train_step(cfg: ModelConfig, mesh, opt_cfg: adamw.OptConfig,
     celeris = celeris or CelerisConfig()
     mode = celeris.collective_mode()
     dp = shd.dp_axes(mesh)
-    tp = mesh.shape.get(shd.MODEL_AXIS, 1) if mesh is not None else 1
     if mode is CollectiveMode.HIERARCHICAL and dp and shd.POD_AXIS not in dp:
         raise ValueError(
             "hierarchical collective mode needs a 'pod' mesh axis "
@@ -286,6 +285,17 @@ def make_train_step(cfg: ModelConfig, mesh, opt_cfg: adamw.OptConfig,
             f"CollectiveMode.HIERARCHICAL assumes intra-reduce -> DCI "
             f"exchange -> intra-gather; HierarchicalSchedule.PHASE_ORDER "
             f"is {order}")
+        # priority contract (cut_order="priority" coupling): this mode
+        # masks ONLY the cross-pod (DCI) shards — the coded, int8-able,
+        # recoverable bytes — so the schedule must place the DCI
+        # exchange in the strictly lowest priority class, i.e. the
+        # window cuts exactly the bytes the trainer knows how to lose
+        # (coupling.PrioritySchedules.low == the masked cross axis).
+        prio = HierarchicalSchedule.PRIORITY
+        assert prio["dci"] < min(prio["rs"], prio["ag"]), (
+            f"CollectiveMode.HIERARCHICAL masks only DCI shards, so the "
+            f"DCI phase must be the lowest (cut-first) priority class; "
+            f"HierarchicalSchedule.PRIORITY is {prio}")
 
     def _grads_one(params, batch, key, drop_rate):
         # the MoE all-to-all coin expects one scalar; hierarchical mode

@@ -4,7 +4,6 @@ Celeris train island on a real (host-device) mesh, dry-run lowering.
 Runs in a subprocess with 8 forced host devices so the main pytest
 process keeps its single-device view for the smoke tests.
 """
-import json
 import os
 import subprocess
 import sys

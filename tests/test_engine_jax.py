@@ -105,6 +105,44 @@ def test_assembled_stats_match_numpy(cell, window):
         np.testing.assert_allclose(b.p99, a.p99, rtol=RTOL)
 
 
+def test_priority_cut_assembly_matches_numpy():
+    """cut_order='priority' through the jitted window: p99 / scalar /
+    per-tier / per-class fractions agree with the numpy reference
+    within the rtol-1e-5 contract (layer-depth classes on a 2-pod
+    hier plan, tight budget so the cut actually binds)."""
+    from repro.core.transport.schedule import layer_priorities, make_plan
+    p = _small(topo=TopologyParams(n_pods=2),
+               work=WorkloadParams(schedule="hier"))
+    eng_np, eng_j = _engines(p, None)
+    plan = make_plan(p.net, p.topo, p.work)
+    cls = layer_priorities(plan)
+    tr_np = eng_np.traces(("roce", "celeris"), 15, 3,
+                          legacy_streams=False)
+    tr_j = eng_j.traces(("roce", "celeris"), 15, 3, legacy_streams=False)
+    to = float(np.percentile(eng_np.assemble(tr_np["roce"], 3).times_us,
+                             50) * 0.5)
+    for order in ("arrival", "priority"):
+        a = eng_np.assemble(
+            dataclasses.replace(tr_np["celeris"], step_priority=cls), 3,
+            celeris_timeout_us=to, adaptive=False, window="round",
+            cut_order=order)
+        b = eng_j.assemble(
+            dataclasses.replace(tr_j["celeris"], step_priority=cls), 3,
+            celeris_timeout_us=to, adaptive=False, window="round",
+            cut_order=order)
+        np.testing.assert_allclose(b.p99, a.p99, rtol=RTOL,
+                                   err_msg=f"{order} p99")
+        np.testing.assert_allclose(b.recv_frac, a.recv_frac,
+                                   rtol=RTOL, atol=1e-9,
+                                   err_msg=f"{order} frac")
+        np.testing.assert_allclose(b.tier_recv_frac, a.tier_recv_frac,
+                                   rtol=RTOL, atol=1e-9)
+        np.testing.assert_allclose(b.prio_recv_frac, a.prio_recv_frac,
+                                   rtol=RTOL, atol=1e-9,
+                                   err_msg=f"{order} per-class frac")
+        np.testing.assert_array_equal(b.prio_pkts, a.prio_pkts)
+
+
 def test_vmapped_batch_equals_per_seed_loop():
     """One vmapped pass over the seed axis gives the same traces as
     three independent single-seed calls."""

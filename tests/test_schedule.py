@@ -14,6 +14,7 @@
 - the hierarchical train step composes with DCI-only wire quantization
   on a real 8-device (pod, data) mesh.
 """
+import dataclasses
 import json
 import os
 import subprocess
@@ -320,6 +321,145 @@ def test_per_pod_burst_rate_vector_runs():
                            adaptive=False)
         loss[key] = cel.tier_loss("dci")
     assert loss["hot"] > loss["calm"]
+
+
+# ------------------- priority classes & priority-ordered window cuts
+
+def _priority_cell(npods, n_rounds=40, seed=7, scale=0.5):
+    """One hier cell assembled under both cut orders at the same
+    (tight) budget, with layer-depth priority classes attached."""
+    base = SimParams(net=NetworkParams(n_nodes=32, nodes_per_tor=32 // npods,
+                                       burst_on_prob=0.0008))
+    hp = topology.hier_params(npods, base=base, dci_oversubscription=8.0,
+                              schedule="hier")
+    eng = BatchedEngine(hp)
+    plan = schedule.make_plan(hp.net, hp.topo, hp.work)
+    cls = schedule.layer_priorities(plan)
+    tr = eng.traces(["roce", "celeris"], n_rounds, seed,
+                    legacy_streams=False)
+    cel = dataclasses.replace(tr["celeris"], step_priority=cls)
+    base = eng.assemble(tr["roce"], seed)
+    to = float((np.percentile(base.times_us, 50)
+                + base.times_us.std()) * scale)
+    stats = {o: eng.assemble(cel, seed, celeris_timeout_us=to,
+                             adaptive=False, window="round", cut_order=o)
+             for o in ("arrival", "priority")}
+    return plan, cls, stats
+
+
+@pytest.mark.parametrize("npods", [2, 4])
+def test_priority_cut_conserves_totals_vs_arrival(npods):
+    """Property: at an equal budget the priority order cuts the SAME
+    total bytes as arrival — times, scalar fractions, and the
+    per-class delivered-packet sum are all conserved; only *which*
+    class the cut lands on moves (low classes absorb it)."""
+    plan, cls, stats = _priority_cell(npods)
+    arr, pri = stats["arrival"], stats["priority"]
+    np.testing.assert_array_equal(arr.times_us, pri.times_us)
+    np.testing.assert_array_equal(arr.recv_frac, pri.recv_frac)
+    # both orders slice one survive vector: identical offered pkts
+    # per class (the layer_priorities override gives 3 classes here)...
+    assert arr.prio_pkts.size == int(cls.max()) + 1 == 3
+    np.testing.assert_array_equal(arr.prio_pkts, pri.prio_pkts)
+    # ...and identical total delivered packets per round
+    got_arr = (arr.prio_recv_frac * arr.prio_pkts).sum(axis=1)
+    got_pri = (pri.prio_recv_frac * pri.prio_pkts).sum(axis=1)
+    np.testing.assert_allclose(got_pri, got_arr, rtol=1e-12, atol=1e-6)
+    # the budget binds in this cell, and the reorder moves the cut
+    # down the class ladder: top class never loses more, class 0
+    # never loses less
+    top = arr.prio_pkts.size - 1
+    assert arr.prio_loss(top) > 0.0          # arrival cuts exact shards
+    assert pri.prio_loss(top) <= arr.prio_loss(top)
+    assert pri.prio_loss(0) >= arr.prio_loss(0)
+
+
+def test_priority_cut_uniform_classes_match_arrival_bitexact():
+    """A single-class plan (flat ring) makes the priority cut land on
+    the same trailing steps as arrival: times and scalar fractions are
+    bit-identical, and the recomputed group allocations agree to float
+    round-off (the reallocation sums in a different order)."""
+    eng = BatchedEngine(SMALL)
+    tr = eng.traces(["roce", "celeris"], 40, seed=11,
+                    legacy_streams=False)
+    base = eng.assemble(tr["roce"], 11)
+    to = float(np.percentile(base.times_us, 50)
+               + base.times_us.std()) * 0.8
+    kw = dict(celeris_timeout_us=to, adaptive=False, window="round")
+    arr = eng.assemble(tr["celeris"], 11, cut_order="arrival", **kw)
+    pri = eng.assemble(tr["celeris"], 11, cut_order="priority", **kw)
+    np.testing.assert_array_equal(arr.times_us, pri.times_us)
+    np.testing.assert_array_equal(arr.recv_frac, pri.recv_frac)
+    np.testing.assert_allclose(pri.tier_recv_frac, arr.tier_recv_frac,
+                               rtol=0, atol=1e-12)
+    np.testing.assert_allclose(pri.prio_recv_frac, arr.prio_recv_frac,
+                               rtol=0, atol=1e-12)
+
+
+def test_arrival_cut_bitexact_vs_pinned_with_priority_metadata():
+    """cut_order='arrival' (explicit) over a trace that CARRIES
+    priority metadata still reproduces the committed pre-priority seed
+    stats bit-for-bit — priority is assembly-time metadata and must
+    never perturb the pinned arrival path."""
+    ref = _pinned()["flat"]
+    eng = BatchedEngine(SMALL)
+    tr = eng.traces(["roce", "celeris"], 40, seed=11,
+                    legacy_streams=False)
+    assert tr["celeris"].step_priority is not None   # engine-attached
+    base = eng.assemble(tr["roce"], 11)
+    to = float(np.percentile(base.times_us, 50)
+               + base.times_us.std()) * 0.8
+    cel = eng.assemble(tr["celeris"], 11, celeris_timeout_us=to,
+                       adaptive=False, window="round",
+                       cut_order="arrival")
+    np.testing.assert_array_equal(cel.times_us,
+                                  np.array(ref["celeris_times_us"]))
+    np.testing.assert_array_equal(cel.recv_frac,
+                                  np.array(ref["celeris_recv_frac"]))
+
+
+def test_layer_priorities_structure():
+    """dci steps stay class 0, the trailing half of the all-gather is
+    promoted to a new top class, and plans without an ag phase come
+    back unchanged."""
+    hp = topology.hier_params(2, base=SMALL, schedule="hier")
+    plan = schedule.make_plan(hp.net, hp.topo, hp.work)
+    cls = schedule.layer_priorities(plan)
+    phase_cls = plan.step_priority()
+    assert cls.max() == phase_cls.max() + 1
+    dci = np.array([plan.phases[k].name == "dci"
+                    for k in plan.phase_of_step])
+    np.testing.assert_array_equal(cls[dci], 0)
+    ag = np.array([plan.phases[k].name.startswith("ag")
+                   for k in plan.phase_of_step])
+    n_top = int(round(ag.sum() * 0.5))
+    assert (cls == cls.max()).sum() == n_top
+    assert np.all(np.where(cls == cls.max())[0]
+                  >= np.where(ag)[0][-1] - n_top)
+    ring = schedule.RingSchedule().plan(SMALL.net, SMALL.topo, SMALL.work)
+    np.testing.assert_array_equal(schedule.layer_priorities(ring),
+                                  ring.step_priority())
+
+
+def test_priority_cut_guards():
+    eng = BatchedEngine(SMALL)
+    tr = eng.traces(["celeris"], 5, 0, legacy_streams=False)
+    with pytest.raises(ValueError, match="cut_order must be"):
+        eng.assemble(tr["celeris"], 0, cut_order="random")
+    bare = dataclasses.replace(tr["celeris"], step_priority=None)
+    with pytest.raises(ValueError, match="step_priority"):
+        eng.assemble(bare, 0, cut_order="priority",
+                     celeris_timeout_us=30_000.0, adaptive=False)
+    with pytest.raises(ValueError, match="step window"):
+        eng.assemble(tr["celeris"], 0, cut_order="priority",
+                     window="step", celeris_timeout_us=30_000.0,
+                     adaptive=False)
+    plan = schedule.make_plan(SMALL.net, SMALL.topo, SMALL.work)
+    with pytest.raises(ValueError, match="shape"):
+        schedule.with_step_priorities(plan, np.zeros(3, dtype=int))
+    with pytest.raises(ValueError, match=">= 0"):
+        schedule.with_step_priorities(
+            plan, -np.ones(plan.steps_per_round, dtype=int))
 
 
 # ------------------------- hierarchical mode + DCI-only quantization

@@ -142,7 +142,7 @@ def test_recorder_rejects_legacy_streams():
 def test_unassembled_record_fails_audit():
     rec = TraceRecorder()
     eng = BatchedEngine(SMALL, recorder=rec)
-    tr = eng.traces(["roce"], 5, 0, legacy_streams=False)
+    eng.traces(["roce"], 5, 0, legacy_streams=False)
     st = BatchedEngine(SMALL).run("roce", 5, seed=0)
     with pytest.raises(ConservationError, match="not assembled"):
         telemetry.audit_round(st, rec.record("roce"))
@@ -153,7 +153,7 @@ def test_unassembled_record_fails_audit():
 def test_trace_export_roundtrips(tmp_path):
     _, _, _, rec = _recorded_flat(n_rounds=10)
     path = tmp_path / "trace.json"
-    obj = trace_export.write_trace(rec, str(path), meta={"test": "yes"})
+    trace_export.write_trace(rec, str(path), meta={"test": "yes"})
     loaded = json.load(open(path))
     counts = trace_export.validate_trace(loaded)
     assert counts["X"] > 0 and counts["M"] > 0
